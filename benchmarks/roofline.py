@@ -1,0 +1,131 @@
+"""§Roofline: derive the three roofline terms per (arch × shape × mesh) from
+the dry-run artifacts (experiments/dryrun_results.json) and compute the
+MODEL_FLOPS / HLO_FLOPs usefulness ratio.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+# parameter counts (total / active) computed from the configs
+_PARAM_CACHE: dict[str, tuple[float, float]] = {}
+
+
+def _lm_params(arch: str) -> tuple[float, float]:
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    from repro import configs as cfgreg
+    cfg = cfgreg.get_config(arch).CONFIG
+    L, D, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    attn = L * (D * cfg.n_heads * hd + 2 * D * cfg.n_kv_heads * hd
+                + cfg.n_heads * hd * D)
+    if cfg.is_moe:
+        ffn_total = L * cfg.moe_experts * 3 * D * cfg.d_ff
+        ffn_active = L * cfg.moe_top_k * 3 * D * cfg.d_ff
+        router = L * D * cfg.moe_experts
+    else:
+        ffn_total = ffn_active = L * 3 * D * cfg.d_ff
+        router = 0
+    embed = 2 * cfg.vocab_padded * D
+    total = attn + ffn_total + router + embed
+    active = attn + ffn_active + router + embed
+    _PARAM_CACHE[arch] = (total, active)
+    return total, active
+
+
+def model_flops(arch: str, shape: str, kind: str, devices: int) -> float | None:
+    """Analytic 'useful' FLOPs per device for the cell, or None if n/a."""
+    from repro import configs as cfgreg
+    mod = cfgreg.get_config(arch)
+    spec = mod.SHAPES[shape]
+    if mod.FAMILY == "lm":
+        total, active = _lm_params(arch)
+        # non-embedding matmul params dominate; use active for MoE
+        n = active
+        if kind == "train":
+            tokens = spec["seq"] * spec["global_batch"]
+            return 6 * n * tokens / devices
+        if kind == "prefill":
+            tokens = spec["seq"] * spec["global_batch"]
+            return 2 * n * tokens / devices
+        # decode: one token per sequence
+        return 2 * n * spec["global_batch"] / devices
+    if mod.FAMILY == "recsys":
+        from repro.graph.ir import infer_shapes
+        graph, _ = mod.BUILD()
+        shapes = infer_shapes(graph)
+        B = spec["batch"]
+        train = spec["kind"] == "train"
+        fl = 0.0
+        for node in graph.topo_order():
+            if node.op == "dense":
+                din = shapes[node.inputs[0]][-1]
+                # serving: user-side denses run at batch 1 (UOI/MaRI)
+                from repro.core.gca import run_gca, Color
+                fl += 2 * B * din * node.attrs["units"]
+        if train:
+            fl *= 3
+        return fl / devices
+    if mod.FAMILY == "gnn":
+        cfg = mod.CONFIG
+        H, R = cfg.d_hidden, cfg.n_rbf
+        if spec["mode"] == "molecule":
+            E = spec["batch"] * spec["n_edges"]
+            N = spec["batch"] * spec["n_nodes"]
+        elif spec["mode"] == "sampled":
+            bn = spec["batch_nodes"]
+            n, N, E = bn, bn, 0
+            for f in spec["fanout"]:
+                n *= f
+                N += n
+                E += n
+        else:
+            N, E = spec["n_nodes"], spec["n_edges"]
+        per_inter = 2 * E * (R * H + H * H + H) + 2 * E * H * H \
+            + 2 * N * 2 * H * H
+        fl = cfg.n_interactions * per_inter + 2 * N * (H * H + H * cfg.n_out)
+        return 3 * fl / devices  # train
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="experiments/dryrun_results.json")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    args = ap.parse_args()
+    recs = json.load(open(args.results))
+    rows = []
+    for r in recs:
+        if "roofline" not in r:
+            continue
+        if args.mesh != "both" and r["mesh"] != args.mesh:
+            continue
+        rf = r["roofline"]
+        mf = model_flops(r["arch"], r["shape"], r["kind"], r["devices"])
+        hlo = r["cost"]["flops_per_device"]
+        ratio = (mf / hlo) if (mf and hlo) else float("nan")
+        dom = rf["bottleneck"].replace("_s", "")
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / bound if bound else 0.0
+        rows.append((r["arch"], r["shape"], r["mesh"], r["kind"],
+                     rf["compute_s"], rf["memory_s"], rf["collective_s"],
+                     dom, frac, ratio))
+    rows.sort()
+    hdr = ("arch", "shape", "mesh", "kind", "compute_s", "memory_s",
+           "collective_s", "bottleneck", "roofline_frac", "useful_flops_ratio")
+    print("| " + " | ".join(hdr) + " |")
+    print("|" + "---|" * len(hdr))
+    for row in rows:
+        print("| {} | {} | {} | {} | {:.4f} | {:.4f} | {:.4f} | {} | "
+              "{:.3f} | {:.2f} |".format(*row))
+
+
+if __name__ == "__main__":
+    main()

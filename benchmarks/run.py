@@ -1,0 +1,225 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. CPU wall-clock stands in for
+the paper's GPU timings (speedup RATIOS are the reproduced quantity; the
+dims are scaled by --scale to keep CPU runtimes sane — ratios are
+dimension-homogeneous so scaling preserves them to first order).
+
+  python -m benchmarks.run                 # all tables
+  python -m benchmarks.run --bench table2  # one table
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import timeit
+from repro.core.mari import (mari_flops, matmul_mari, matmul_mari_fragmented,
+                             matmul_vanilla, vanilla_flops)
+
+
+def _row(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _mk(key, *shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _time_pair(B, Du, Dr, d, iters=5):
+    """Wall-time vanilla vs MaRI matmul at the given dims."""
+    ks = jax.random.split(jax.random.PRNGKey(B + Du + Dr + d), 4)
+    xu, xr = _mk(ks[0], 1, Du), _mk(ks[1], B, Dr)
+    wu, wr = _mk(ks[2], Du, d), _mk(ks[3], Dr, d)
+    x_tiled = jnp.concatenate([jnp.broadcast_to(xu, (B, Du)), xr], -1)
+    w = jnp.concatenate([wu, wr], 0)
+    f_van = jax.jit(matmul_vanilla)
+    f_mari = jax.jit(matmul_mari)
+    t_van = timeit(lambda: f_van(x_tiled, w), iters=iters)
+    t_mari = timeit(lambda: f_mari(xu, xr, wu, wr), iters=iters)
+    return t_van, t_mari
+
+
+# ---------------------------------------------------------------------------
+# Table 2 / Figure 3: MatMul_MaRI vs vanilla across B, D_user, D_rest, D_hid
+# ---------------------------------------------------------------------------
+
+def bench_table2(scale: float = 0.25, iters: int = 5):
+    s = lambda x: max(16, int(x * scale))
+    # varying B (D_user=4000, D_item=D_cross=1000, D_hidden=512)
+    for B in [100, 500, 1000, 2000]:
+        Du, Dr, d = s(4000), s(2000), s(512)
+        tv, tm = _time_pair(B, Du, Dr, d, iters)
+        fs = vanilla_flops(B, Du + Dr, d) / mari_flops(B, Du, Dr, d)
+        _row(f"table2/varyB/B={B}", tm["mean_us"],
+             f"time_speedup={tv['mean_us'] / tm['mean_us']:.2f}x;"
+             f"flops_speedup={fs:.2f}x")
+    # varying D_user (B=2000, D_rest=1000, D_hidden=512)
+    for Du0 in [500, 1000, 2000, 4000, 8000]:
+        B, Du, Dr, d = 2000, s(Du0), s(1000), s(512)
+        tv, tm = _time_pair(B, Du, Dr, d, iters)
+        fs = vanilla_flops(B, Du + Dr, d) / mari_flops(B, Du, Dr, d)
+        _row(f"table2/varyDu/Du={Du0}", tm["mean_us"],
+             f"time_speedup={tv['mean_us'] / tm['mean_us']:.2f}x;"
+             f"flops_speedup={fs:.2f}x")
+    # varying D_item/cross (B=2000, D_user=4000, D_hidden=512)
+    for Dr0 in [500, 1000, 2000, 5000]:
+        B, Du, Dr, d = 2000, s(4000), s(Dr0), s(512)
+        tv, tm = _time_pair(B, Du, Dr, d, iters)
+        fs = vanilla_flops(B, Du + Dr, d) / mari_flops(B, Du, Dr, d)
+        _row(f"table2/varyDrest/Drest={Dr0}", tm["mean_us"],
+             f"time_speedup={tv['mean_us'] / tm['mean_us']:.2f}x;"
+             f"flops_speedup={fs:.2f}x")
+    # varying D_hidden (B=2000, D_user=4000, D_item=1000)
+    for d0 in [128, 512, 1024, 2048]:
+        B, Du, Dr, d = 2000, s(4000), s(1000), s(d0)
+        tv, tm = _time_pair(B, Du, Dr, d, iters)
+        fs = vanilla_flops(B, Du + Dr, d) / mari_flops(B, Du, Dr, d)
+        _row(f"table2/varyDhid/Dhid={d0}", tm["mean_us"],
+             f"time_speedup={tv['mean_us'] / tm['mean_us']:.2f}x;"
+             f"flops_speedup={fs:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Table 3 / Figure 4: fragmented MaRI degradation vs chunk size (§2.4)
+# ---------------------------------------------------------------------------
+
+def bench_table3(scale: float = 0.25, iters: int = 5):
+    B = 2000
+    s = lambda x: max(16, int(x * scale))
+    Du, Di, d = s(4000), s(1000), s(256)
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    xu, xi = _mk(ks[0], 1, Du), _mk(ks[1], B, Di)
+    wu, wi = _mk(ks[2], Du, d), _mk(ks[3], Di, d)
+    x_tiled = jnp.concatenate([jnp.broadcast_to(xu, (B, Du)), xi], -1)
+    w = jnp.concatenate([wu, wi], 0)
+    f_van = jax.jit(matmul_vanilla)
+    f_neat = jax.jit(matmul_mari)
+    t_van = timeit(lambda: f_van(x_tiled, w), iters=iters)["mean_us"]
+    t_neat = timeit(lambda: f_neat(xu, xi, wu, wi), iters=iters)["mean_us"]
+    _row("table3/original", t_van, "baseline=vanilla_matmul")
+    _row("table3/neat_mari", t_neat,
+         f"vs_original={100 * (t_neat - t_van) / t_van:+.1f}%")
+
+    for chunk0 in [50, 100, 200, 400, 800]:
+        chunk = max(4, int(chunk0 * scale))
+        # interleave user/item chunks (the industrial fragmented layout)
+        segs, off_u, off_i = [], 0, 0
+        turn = 0
+        while off_u < Du or off_i < Di:
+            if (turn % 2 == 0 and off_u < Du) or off_i >= Di:
+                wdt = min(chunk, Du - off_u)
+                segs.append((xu[:, off_u:off_u + wdt],
+                             wu[off_u:off_u + wdt]))
+                off_u += wdt
+            else:
+                wdt = min(chunk, Di - off_i)
+                segs.append((xi[:, off_i:off_i + wdt],
+                             wi[off_i:off_i + wdt]))
+                off_i += wdt
+            turn += 1
+        f_frag = jax.jit(lambda *flat: matmul_mari_fragmented(
+            list(zip(flat[::2], flat[1::2]))))
+        flat = [a for seg in segs for a in seg]
+        t_frag = timeit(lambda: f_frag(*flat), iters=iters)["mean_us"]
+        _row(f"table3/fragmented/chunk={chunk0}", t_frag,
+             f"n_chunks={len(segs)};"
+             f"vs_original={100 * (t_frag - t_van) / t_van:+.1f}%;"
+             f"vs_neat={100 * (t_frag - t_neat) / t_neat:+.1f}%")
+
+
+# ---------------------------------------------------------------------------
+# Table 1: end-to-end ranking model — VanI vs UOI vs MaRI avg/p99
+# ---------------------------------------------------------------------------
+
+def bench_table1(iters: int = 30):
+    from repro.core import apply_mari
+    from repro.data.features import make_recsys_feeds
+    from repro.graph.executor import Executor, init_graph_params
+    from repro.models.ranking import (PaperRankingConfig,
+                                      build_paper_ranking_model)
+
+    cfg = PaperRankingConfig().scaled(0.12)
+    graph, cfg = build_paper_ranking_model(cfg)
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    B = 2048
+    feeds = make_recsys_feeds(graph, B, jax.random.PRNGKey(1))
+
+    results = {}
+    for mode in ("vani", "uoi", "mari"):
+        if mode == "mari":
+            g2, p2, _ = apply_mari(graph, params)
+            step = jax.jit(Executor(g2, "uoi").run)
+            args = (p2, feeds)
+        else:
+            step = jax.jit(Executor(graph, mode).run)
+            args = (params, feeds)
+        t = timeit(lambda: step(*args), warmup=3, iters=iters)
+        results[mode] = t
+        _row(f"table1/{mode}", t["mean_us"], f"p99_us={t['p99_us']:.1f}")
+    avg = results["uoi"]["mean_us"] / results["mari"]["mean_us"]
+    p99 = results["uoi"]["p99_us"] / results["mari"]["p99_us"]
+    _row("table1/speedup_mari_vs_uoi", results["mari"]["mean_us"],
+         f"avg={avg:.2f}x;p99={p99:.2f}x (paper: 1.32x/1.26x)")
+    lat = 100 * (results["uoi"]["mean_us"] - results["mari"]["mean_us"]) \
+        / results["uoi"]["mean_us"]
+    _row("table1/stage_latency_change", results["mari"]["mean_us"],
+         f"coarse_ranking_latency={-lat:.2f}% (paper: -2.24%)")
+
+
+# ---------------------------------------------------------------------------
+# Appendix B.1: UOI vs VanI cross-attention (K/V projected once vs B times)
+# ---------------------------------------------------------------------------
+
+def bench_uoi_attention(iters: int = 10):
+    from repro.nn.attention import cross_attention
+    d, L = 64, 256
+    for B in [128, 512, 2048]:
+        ks = jax.random.split(jax.random.PRNGKey(B), 3)
+        q = _mk(ks[0], B, 1, d)
+        k1 = _mk(ks[1], 1, L, d)
+        v1 = _mk(ks[2], 1, L, d)
+        kB = jnp.broadcast_to(k1, (B, L, d)) + 0.0   # materialized tile
+        vB = jnp.broadcast_to(v1, (B, L, d)) + 0.0
+        wk, wv = _mk(ks[0], d, d), _mk(ks[1], d, d)
+
+        @jax.jit
+        def attn(q, k, v):
+            return cross_attention(q, k @ wk, v @ wv)
+
+        tv = timeit(lambda: attn(q, kB, vB), iters=iters)["mean_us"]
+        tu = timeit(lambda: attn(q, k1, v1), iters=iters)["mean_us"]
+        flops_ratio = (B + 2 * L) / (B * (1 + 2 * L))
+        _row(f"appendixB1/uoi_vs_vani/B={B}", tu,
+             f"time_speedup={tv / tu:.2f}x;flops_ratio={flops_ratio:.4f}")
+
+
+BENCHES = {
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table3": bench_table3,
+    "uoi": bench_uoi_attention,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", choices=list(BENCHES) + ["all"], default="all")
+    ap.add_argument("--scale", type=float, default=0.25,
+                    help="dimension scale for CPU-feasible timings")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.bench in ("table2", "all"):
+        bench_table2(args.scale)
+    if args.bench in ("table3", "all"):
+        bench_table3(args.scale)
+    if args.bench in ("table1", "all"):
+        bench_table1()
+    if args.bench in ("uoi", "all"):
+        bench_uoi_attention()
+
+
+if __name__ == "__main__":
+    main()

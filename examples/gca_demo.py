@@ -1,0 +1,56 @@
+"""GCA demo: Algorithm 1 on (a) the graph IR and (b) a raw traced jaxpr.
+
+Shows the coloring, the boundary concats, and why nodes behind a
+nonlinearity are NOT eligible — plus the jaxpr-level auditor that works on
+any jitted model function.
+
+  PYTHONPATH=src python examples/gca_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import Color, detect_in_jaxpr, run_gca
+from repro.models.ranking import (PaperRankingConfig,
+                                  build_paper_ranking_model,
+                                  expected_eligible)
+
+# ---- (a) graph IR: the paper's own ranking model -------------------------
+graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(0.05))
+res = run_gca(graph)
+print("=== GCA on the paper's ranking model (Fig. 1) ===")
+print(res.summary())
+print("\nnode colors:")
+for name, color in res.colors.items():
+    marker = {Color.YELLOW: "Y", Color.BLUE: "B", Color.UNCOLORED: "."}[color]
+    star = " <-- MaRI-eligible" if name in res.eligible else ""
+    print(f"  [{marker}] {name}{star}")
+
+expect = expected_eligible(cfg)
+found = set(res.eligible)
+print(f"\npaper-named sites found automatically: {sorted(expect & found)}")
+print(f"extra sites GCA discovered: {sorted(found - expect)}")
+assert expect <= found
+
+# ---- (b) jaxpr-level detection on an arbitrary jitted function ------------
+print("\n=== jaxpr-GCA on a hand-written model function ===")
+
+
+def my_model(params, feeds):
+    u = jax.nn.relu(feeds["user_vec"] @ params["wu"])
+    z = jnp.concatenate(
+        [jnp.broadcast_to(u, (feeds["item_vec"].shape[0], u.shape[-1])),
+         feeds["item_vec"]], axis=-1)
+    h = z @ params["w1"]                    # eligible (pre-activation)
+    h2 = jax.nn.relu(h) @ params["w2"]      # NOT eligible (behind relu)
+    return h2
+
+
+params = {"wu": jnp.zeros((32, 16)), "w1": jnp.zeros((48, 64)),
+          "w2": jnp.zeros((64, 1))}
+feeds = {"user_vec": jnp.zeros((1, 32)), "item_vec": jnp.zeros((100, 32))}
+report = detect_in_jaxpr(my_model,
+                         {"user_vec": "user", "item_vec": "item"},
+                         params, feeds)
+print(report.summary())
+assert len(report.eligible) == 1
+print("exactly the pre-activation matmul is flagged ✓")

@@ -1,0 +1,143 @@
+"""Checkpointing: pytree <-> disk with async writes, retention, resume.
+
+Format: one ``.npz`` of flattened leaves (keyed by tree path) + a msgpack
+sidecar with the treedef paths and step metadata. Writes go to a temp dir
+and are atomically renamed, so a killed process never leaves a half-written
+checkpoint — the restart path picks the newest COMPLETE step (this is the
+node-failure story: any worker can die at any point and training resumes
+from the last durable step).
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import os
+import re
+import shutil
+import time
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+PyTree = Any
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    """npz can't hold ml_dtypes (bf16/f8); widen to f32 — the restore path
+    casts back to the template dtype, losslessly for widening round-trips."""
+    arr = np.asarray(jax.device_get(leaf))
+    if arr.dtype.kind == "V" or str(arr.dtype) in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2"):
+        arr = np.asarray(jax.device_get(
+            jax.numpy.asarray(leaf, jax.numpy.float32)))
+    return arr
+
+
+def _flatten_with_paths(tree: PyTree) -> list[tuple[str, np.ndarray]]:
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(path), _to_numpy(leaf))
+            for path, leaf in leaves]
+
+
+def save_pytree(tree: PyTree, path: str, meta: dict | None = None) -> None:
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    items = _flatten_with_paths(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": arr for i, (_, arr) in enumerate(items)})
+    sidecar = {"paths": [p for p, _ in items], "meta": meta or {},
+               "time": time.time()}
+    with open(os.path.join(tmp, "meta.msgpack"), "wb") as f:
+        f.write(msgpack.packb(sidecar))
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)  # atomic publish
+
+
+def restore_pytree(template: PyTree, path: str) -> PyTree:
+    """Restore into the structure (and shardings/dtypes) of ``template``."""
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        sidecar = msgpack.unpackb(f.read())
+    data = np.load(os.path.join(path, "arrays.npz"))
+    by_path = {p: data[f"leaf_{i}"] for i, p in enumerate(sidecar["paths"])}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path_t, leaf in leaves:
+        key = jax.tree_util.keystr(path_t)
+        if key not in by_path:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = by_path[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def checkpoint_meta(path: str) -> dict:
+    with open(os.path.join(path, "meta.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())["meta"]
+
+
+class CheckpointManager:
+    """Step-indexed checkpoints with retention and async (overlapped) saves."""
+
+    def __init__(self, directory: str, max_to_keep: int = 3,
+                 async_save: bool = True):
+        self.dir = directory
+        self.max_to_keep = max_to_keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = cf.ThreadPoolExecutor(1) if async_save else None
+        self._pending: cf.Future | None = None
+
+    # -- write ---------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, meta: dict | None = None) -> None:
+        self.wait()  # one in-flight save at a time
+        # snapshot to host BEFORE returning control (device buffers may be
+        # donated by the next step)
+        host = jax.tree_util.tree_map(_to_numpy, tree)
+        path = os.path.join(self.dir, f"step_{step}")
+        meta = dict(meta or {}, step=step)
+        if self._pool is None:
+            save_pytree(host, path, meta)
+            self._gc()
+        else:
+            def work():
+                save_pytree(host, path, meta)
+                self._gc()
+            self._pending = self._pool.submit(work)
+
+    def wait(self) -> None:
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    # -- read ----------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        steps = []
+        for name in os.listdir(self.dir):
+            m = _STEP_RE.match(name)
+            if m and os.path.exists(os.path.join(self.dir, name, "meta.msgpack")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: PyTree, step: int | None = None
+                ) -> tuple[PyTree, dict]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step}")
+        return restore_pytree(template, path), checkpoint_meta(path)
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.max_to_keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

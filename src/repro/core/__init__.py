@@ -1,0 +1,15 @@
+"""The paper's primary contribution: GCA detection, MaRI rewrite, reorg."""
+from repro.core.gca import Color, run_gca, GCAResult  # noqa: F401
+from repro.core.mari import (  # noqa: F401
+    mari_rewrite,
+    convert_params,
+    MaRIConversion,
+    matmul_mari,
+    matmul_mari_fragmented,
+    mari_flops,
+    vanilla_flops,
+)
+from repro.core.mari import apply_mari  # noqa: F401
+from repro.core.partition import WeightPartition  # noqa: F401
+from repro.core.reorg import reorganize, ReorgPlan, convert_params_reorg  # noqa: F401
+from repro.core.jaxpr_gca import detect_in_jaxpr, JaxprGCAReport  # noqa: F401

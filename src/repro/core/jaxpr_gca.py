@@ -1,0 +1,138 @@
+"""GCA on raw jaxprs — Algorithm 1 applied to traced JAX functions.
+
+The graph-IR pass (repro.core.gca) is the rewriting path. This module is the
+*detector* for arbitrary jitted model functions: colour the jaxpr's input
+avals by feature domain, propagate Yellow/Blue through equations, find
+``concatenate`` eqns with mixed-colour operands, and report every
+``dot_general`` reachable through non-computational primitives. Useful as an
+audit tool ("did the serving graph regress? which matmuls SHOULD be MaRI?")
+and as evidence the detection transfers beyond our own IR.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+from jax.extend import core as jcore
+
+from repro.core.gca import Color
+
+# Primitives that do not compute on values (layout/metadata only) — the
+# jaxpr analogue of the paper's "non-computational nodes".
+TRANSPARENT_PRIMITIVES = frozenset({
+    "reshape", "convert_element_type", "stop_gradient", "squeeze",
+    "broadcast_in_dim", "transpose", "copy", "bitcast_convert_type",
+})
+
+
+@dataclasses.dataclass
+class EligibleMatMul:
+    eqn_index: int
+    primitive: str
+    boundary_concat_index: int
+    lhs_shape: tuple[int, ...]
+    rhs_shape: tuple[int, ...]
+
+
+@dataclasses.dataclass
+class JaxprGCAReport:
+    colors_in: dict[int, Color]          # invar index -> colour
+    mixed_concats: list[int]             # eqn indices of boundary concatenates
+    eligible: list[EligibleMatMul]
+    n_eqns: int
+
+    def summary(self) -> str:
+        return (f"jaxpr-GCA: {self.n_eqns} eqns, "
+                f"{len(self.mixed_concats)} boundary concats, "
+                f"{len(self.eligible)} eligible dot_generals "
+                f"{[(e.eqn_index, e.lhs_shape, e.rhs_shape) for e in self.eligible]}")
+
+
+def _color_of_var(colors: dict, v) -> Color:
+    if isinstance(v, jcore.Literal):
+        return Color.UNCOLORED
+    return colors.get(v, Color.UNCOLORED)
+
+
+def _merge(colors_in: list[Color]) -> Color:
+    if Color.BLUE in colors_in:
+        return Color.BLUE
+    if Color.YELLOW in colors_in:
+        return Color.YELLOW
+    return Color.UNCOLORED
+
+
+def detect_in_jaxpr(
+    fn: Callable,
+    domains: dict[str, str],
+    *example_args,
+    static_argnums: tuple[int, ...] = (),
+) -> JaxprGCAReport:
+    """Trace ``fn(**example_args)`` and run GCA.
+
+    domains maps flattened-input-leaf *path substrings* (from
+    jax.tree_util.keystr over the args tuple) to 'user'|'item'|'cross'.
+    Leaves not mentioned are Uncoloured (params etc.). Feature inputs must
+    therefore arrive in named containers (dicts / dataclasses) so their
+    domain is visible in the path — which is how every model in this repo
+    passes feeds.
+    """
+    closed = jax.make_jaxpr(fn, static_argnums=static_argnums)(*example_args)
+    jaxpr = closed.jaxpr
+
+    leaves_with_paths, _ = jax.tree_util.tree_flatten_with_path(example_args)
+    colors: dict = {}
+    colors_in: dict[int, Color] = {}
+    for i, (path, _leaf) in enumerate(leaves_with_paths):
+        key = jax.tree_util.keystr(path)
+        dom = None
+        for name, d in domains.items():
+            if name in key:
+                dom = d
+                break
+        c = (Color.YELLOW if dom == "user"
+             else Color.BLUE if dom in ("item", "cross")
+             else Color.UNCOLORED)
+        if i < len(jaxpr.invars):
+            colors[jaxpr.invars[i]] = c
+            colors_in[i] = c
+
+    mixed: list[int] = []
+    producers: dict = {}
+    for idx, eqn in enumerate(jaxpr.eqns):
+        in_colors = [_color_of_var(colors, v) for v in eqn.invars]
+        out_color = _merge(in_colors)
+        for ov in eqn.outvars:
+            colors[ov] = out_color
+            producers[ov] = (idx, eqn)
+        if (eqn.primitive.name == "concatenate"
+                and Color.YELLOW in in_colors and Color.BLUE in in_colors):
+            mixed.append(idx)
+
+    # forward walk: from each boundary concat output, follow transparent eqns
+    # to dot_general.
+    eligible: list[EligibleMatMul] = []
+    seen_dots: set[int] = set()
+    for cidx in mixed:
+        frontier = set(jaxpr.eqns[cidx].outvars)
+        while frontier:
+            nxt = set()
+            for idx, eqn in enumerate(jaxpr.eqns):
+                if not any((not isinstance(v, jcore.Literal)) and v in frontier
+                           for v in eqn.invars):
+                    continue
+                pname = eqn.primitive.name
+                if pname == "dot_general" and idx not in seen_dots:
+                    seen_dots.add(idx)
+                    eligible.append(EligibleMatMul(
+                        eqn_index=idx, primitive=pname,
+                        boundary_concat_index=cidx,
+                        lhs_shape=tuple(eqn.invars[0].aval.shape),
+                        rhs_shape=tuple(eqn.invars[1].aval.shape)))
+                elif pname in TRANSPARENT_PRIMITIVES:
+                    nxt.update(eqn.outvars)
+            frontier = nxt
+
+    return JaxprGCAReport(colors_in=colors_in, mixed_concats=mixed,
+                          eligible=eligible, n_eqns=len(jaxpr.eqns))

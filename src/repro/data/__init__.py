@@ -1,0 +1,3 @@
+from repro.data.features import make_recsys_feeds, make_labels, feed_specs  # noqa: F401
+from repro.data.sampler import NeighborSampler, random_graph, batched_molecules  # noqa: F401
+from repro.data.lm import token_batch, token_batch_specs  # noqa: F401

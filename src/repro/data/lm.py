@@ -1,0 +1,17 @@
+"""LM token batches (synthetic) and their ShapeDtypeStruct specs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def token_batch(key, batch: int, seq: int, vocab: int) -> dict[str, jax.Array]:
+    k1, k2 = jax.random.split(key)
+    tokens = jax.random.randint(k1, (batch, seq), 0, vocab, jnp.int32)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def token_batch_specs(batch: int, seq: int) -> dict[str, jax.ShapeDtypeStruct]:
+    return {"tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}

@@ -1,0 +1,6 @@
+from repro.ft.failures import (  # noqa: F401
+    HeartbeatMonitor,
+    ElasticPlan,
+    plan_elastic_remesh,
+    HedgePolicy,
+)

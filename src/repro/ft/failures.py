@@ -1,0 +1,109 @@
+"""Fault-tolerance control plane (simulated — this container has one host,
+so the DETECTION and PLANNING layers are real code exercised by tests, while
+the transport (who pings whom) is an injectable clock/callback).
+
+* HeartbeatMonitor — declares a worker dead after ``timeout`` without a
+  heartbeat; the training loop polls it each step and triggers
+  checkpoint-restore + re-mesh when membership changes.
+* plan_elastic_remesh — given surviving device count, picks the largest
+  valid (data, model) mesh that preserves the TP degree (model axis is
+  topology-constrained; DP shrinks), and reports the batch re-split.
+* HedgePolicy — straggler mitigation for serving: duplicate a candidate
+  mini-batch onto a second replica once its latency exceeds the rolling
+  p99; first responder wins (standard tail-at-scale hedging).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: list[str], timeout: float = 10.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last_seen = {w: clock() for w in workers}
+
+    def heartbeat(self, worker: str) -> None:
+        self.last_seen[worker] = self.clock()
+
+    def dead(self) -> list[str]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items()
+                if now - t > self.timeout]
+
+    def alive(self) -> list[str]:
+        now = self.clock()
+        return [w for w, t in self.last_seen.items()
+                if now - t <= self.timeout]
+
+    def remove(self, worker: str) -> None:
+        self.last_seen.pop(worker, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: tuple[int, ...]
+    new_shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    dropped_devices: int
+    global_batch_scale: float     # keep per-device batch constant
+    notes: str = ""
+
+
+def plan_elastic_remesh(old_shape: tuple[int, ...], axes: tuple[str, ...],
+                        surviving_devices: int) -> ElasticPlan:
+    """Shrink DP axes to the largest power-of-two that fits the survivors
+    while preserving the model (TP) axis — TP re-layout would need a full
+    resharding of every weight, DP shrink only re-splits the batch."""
+    model = old_shape[axes.index("model")]
+    if surviving_devices < model:
+        raise ValueError(
+            f"cannot preserve TP={model} with {surviving_devices} devices; "
+            "full re-layout required")
+    dp_budget = surviving_devices // model
+    new_dp = 1
+    while new_dp * 2 <= dp_budget:
+        new_dp *= 2
+    if "pod" in axes:
+        # collapse pod into data when a pod is partially lost
+        new_shape = tuple(
+            {"pod": 1, "data": new_dp, "model": model}[a] for a in axes)
+    else:
+        new_shape = tuple(
+            {"data": new_dp, "model": model}[a] for a in axes)
+    old_dp = 1
+    for a, s in zip(axes, old_shape):
+        if a != "model":
+            old_dp *= s
+    return ElasticPlan(
+        old_shape=old_shape, new_shape=new_shape, axes=axes,
+        dropped_devices=old_dp * model - surviving_devices,
+        global_batch_scale=new_dp / old_dp,
+        notes=f"DP {old_dp}->{new_dp}, TP preserved at {model}")
+
+
+class HedgePolicy:
+    """Rolling-quantile request hedging."""
+
+    def __init__(self, quantile: float = 0.99, window: int = 512,
+                 min_hedge_ms: float = 5.0):
+        self.q = quantile
+        self.lat = deque(maxlen=window)
+        self.min_hedge_ms = min_hedge_ms
+
+    def observe(self, latency_ms: float) -> None:
+        self.lat.append(latency_ms)
+
+    def hedge_deadline_ms(self) -> float:
+        if len(self.lat) < 16:
+            return self.min_hedge_ms * 10
+        xs = sorted(self.lat)
+        idx = min(len(xs) - 1, int(self.q * len(xs)))
+        return max(xs[idx], self.min_hedge_ms)
+
+    def should_hedge(self, elapsed_ms: float) -> bool:
+        return elapsed_ms >= self.hedge_deadline_ms()

@@ -1,0 +1,2 @@
+from repro.graph.ir import Graph, GraphBuilder, Node, infer_shapes, TRANSPARENT_OPS  # noqa: F401
+from repro.graph.executor import Executor, init_graph_params  # noqa: F401

@@ -1,0 +1,260 @@
+"""Graph executor: interprets a repro.graph IR under jit.
+
+Batch semantics — the key to VanI / UOI / MaRI:
+
+* Every feed carries a leading batch dim. Item/cross feeds arrive at B
+  (candidate count); user feeds arrive at 1.
+* ``vani`` mode tiles user feeds to B at entry — the whole graph runs at B
+  (training-identical computation, fully redundant user side).
+* ``uoi`` mode keeps user feeds at 1. Batch-1-ness propagates through the
+  user-only subgraph automatically; the first op that mixes batch-1 with
+  batch-B inputs (a concat, an add, an attention) broadcasts — that IS the
+  deferred tile of Fig. 1(c).
+* ``mari`` is not a mode here: the MaRI pass rewrites eligible ``dense``
+  nodes into ``mari_dense`` nodes (repro.core.mari) and the rewritten graph
+  runs in ``uoi`` mode — the tile is deferred *through* the matmul (Eq. 7).
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, KeySeq, glorot, normal_init
+from repro.graph.ir import Graph, Node, infer_shapes
+from repro.nn.layers import ACTIVATIONS
+from repro.nn.attention import cross_attention
+
+
+def init_graph_params(graph: Graph, key, dtype=jnp.float32) -> dict:
+    """Initialize params for every parameterized node."""
+    ks = KeySeq(key)
+    shapes = infer_shapes(graph)
+    params: dict = {}
+    for n in graph.topo_order():
+        if n.op == "dense":
+            din = shapes[n.inputs[0]][-1]
+            p = {"w": glorot(next(ks), (din, n.attrs["units"]), dtype)}
+            if n.attrs.get("use_bias", True):
+                p["b"] = jnp.zeros((n.attrs["units"],), dtype)
+            params[n.name] = p
+        elif n.op == "embedding":
+            scale = 1.0 / max(n.attrs["vocab"], 1) ** 0.5
+            params[n.name] = {
+                "table": normal_init(next(ks), (n.attrs["vocab"], n.attrs["dim"]),
+                                     scale, dtype)}
+        elif n.op == "target_attention":
+            shapes_local = infer_shapes(graph)
+            d = shapes_local[n.inputs[0]][-1]
+            dims = (4 * d,) + tuple(n.attrs["mlp_hidden"]) + (1,)
+            p = {}
+            for li, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+                p[f"layer_{li}"] = {"w": glorot(next(ks), (di, do), dtype),
+                                    "b": jnp.zeros((do,), dtype)}
+            if n.attrs.get("decomposed"):
+                # re-parameterized unit (core.mari.AttnRewrite): split blocks
+                h1 = n.attrs["mlp_hidden"][0]
+                p["layer_0"] = {
+                    "w_kd": glorot(next(ks), (d, h1), dtype),
+                    "w_qd": glorot(next(ks), (d, h1), dtype),
+                    "w_p": glorot(next(ks), (d, h1), dtype),
+                    "b": jnp.zeros((h1,), dtype)}
+            params[n.name] = p
+        elif n.op == "mari_dense":
+            # Normally produced by repro.core.mari.convert_params; direct init
+            # creates the already-split blocks.
+            units = n.attrs["units"]
+            p = {}
+            for label, seg_idx in n.attrs["groups"]:
+                d = sum(n.attrs["seg_widths"][i] for i in seg_idx)
+                p[f"w_{label}"] = glorot(next(ks), (d, units), dtype)
+            if n.attrs.get("use_bias", True):
+                p["b"] = jnp.zeros((units,), dtype)
+            params[n.name] = p
+    return params
+
+
+def _bcast_batch(xs: list[Array]) -> list[Array]:
+    """Broadcast leading batch dims (1 -> B) across a list of arrays."""
+    b = max(x.shape[0] for x in xs)
+    out = []
+    for x in xs:
+        if x.shape[0] != b:
+            x = jnp.broadcast_to(x, (b,) + x.shape[1:])
+        out.append(x)
+    return out
+
+
+def _run_mari_dense(node: Node, params: dict, vals: dict) -> Array:
+    """Eq. 7: Tile(Σ_user x_u W_u, B) + Σ_rest x W  — tile realized as a
+    broadcast add (never materialized)."""
+    attrs = node.attrs
+    p = params[node.name]
+    cast = attrs.get("cast_dtype")
+    acc = None
+    if attrs.get("fragment", False):
+        # Table-3 regime: one small matmul per original concat segment.
+        for i, seg in enumerate(node.inputs):
+            x = vals[seg]
+            if cast:
+                x = x.astype(cast)
+            y = x @ p[f"w_seg{i}"]
+            acc = y if acc is None else acc + y
+    else:
+        for label, seg_idx in attrs["groups"]:
+            xs = [vals[node.inputs[i]] for i in seg_idx]
+            xs = _bcast_batch(xs) if len({x.shape[0] for x in xs}) > 1 else xs
+            x = jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
+            if cast:
+                x = x.astype(cast)
+            y = x @ p[f"w_{label}"]
+            acc = y if acc is None else acc + y  # (1,u) + (B,u) broadcasts
+    if attrs.get("use_bias", True):
+        acc = acc + p["b"]
+    return ACTIVATIONS[attrs.get("activation", "identity")](acc)
+
+
+class Executor:
+    """Interpret a graph. Construct once, then jit ``run``."""
+
+    def __init__(self, graph: Graph, mode: str = "uoi"):
+        if mode not in ("vani", "uoi"):
+            raise ValueError(f"mode must be 'vani' or 'uoi', got {mode!r}")
+        self.graph = graph
+        self.mode = mode
+        self._user_inputs = {
+            n.name for n in graph.input_nodes() if n.attrs.get("domain") == "user"
+        }
+
+    def run(self, params: dict, feeds: Mapping[str, Array]) -> dict[str, Array]:
+        vals: dict[str, Array] = {}
+        batch = max((v.shape[0] for k, v in feeds.items()
+                     if k not in self._user_inputs), default=1)
+        for n in self.graph.topo_order():
+            vals[n.name] = self._eval(n, params, vals, feeds, batch)
+        return {o: vals[o] for o in self.graph.outputs}
+
+    def __call__(self, params, feeds):
+        return self.run(params, feeds)
+
+    # ------------------------------------------------------------------
+    def _eval(self, n: Node, params, vals, feeds, batch: int) -> Array:
+        op = n.op
+        if op == "input":
+            x = feeds[n.name]
+            if (self.mode == "vani" and n.name in self._user_inputs
+                    and x.shape[0] == 1 and batch > 1):
+                x = jnp.broadcast_to(x, (batch,) + x.shape[1:])
+            return x
+        ins = [vals[i] for i in n.inputs]
+        if op == "dense":
+            p = params[n.name]
+            y = ins[0] @ p["w"]
+            if n.attrs.get("use_bias", True):
+                y = y + p["b"]
+            return ACTIVATIONS[n.attrs.get("activation", "identity")](y)
+        if op == "mari_dense":
+            return _run_mari_dense(n, params, vals)
+        if op == "embedding":
+            rows = jnp.take(params[n.name]["table"], ins[0], axis=0)
+            pool = n.attrs.get("pool")
+            if pool == "sum":
+                rows = rows.sum(axis=-2)
+            elif pool == "mean":
+                rows = rows.mean(axis=-2)
+            return rows
+        if op == "concat":
+            xs = _bcast_batch(ins)
+            return jnp.concatenate(xs, axis=n.attrs.get("axis", -1))
+        if op == "add":
+            return ins[0] + ins[1]
+        if op == "mul":
+            return ins[0] * ins[1]
+        if op == "sub":
+            return ins[0] - ins[1]
+        if op == "scale":
+            return ins[0] * n.attrs["factor"]
+        if op == "target_attention":
+            from repro.nn.attention import target_attention as _ta
+            from repro.nn.layers import dense_apply
+            p = params[n.name]
+            nlayers = len(p)
+            q, keys = ins[0], ins[1]
+            if n.attrs.get("has_mask"):
+                mask = ins[2]
+            else:
+                mask = jnp.ones(keys.shape[:-1], bool)
+
+            if n.attrs.get("decomposed") and "w_kd" in p["layer_0"]:
+                # Beyond-paper re-parameterized unit (core.mari.AttnRewrite):
+                # keys are (1, L, D) one-shot; (B, L, 4D) never materializes.
+                l0 = p["layer_0"]
+                k1 = keys[0]                                    # (L, D)
+                u_part = k1 @ l0["w_kd"]                        # (L, h) once
+                q_part = q @ l0["w_qd"]                         # (B, h)
+                t = k1[:, :, None] * l0["w_p"][None]            # (L, D, h) once
+                p_part = jnp.einsum("bd,ldh->blh", q, t)        # (B, L, h)
+                h = jax.nn.relu(u_part[None] + q_part[:, None, :]
+                                + p_part + l0["b"])
+                for li in range(1, nlayers):
+                    h = dense_apply(p[f"layer_{li}"], h)
+                    if li < nlayers - 1:
+                        h = jax.nn.relu(h)
+                scores = h[..., 0]                              # (B, L)
+                scores = jnp.where(mask, scores, -1e30)
+                w = jax.nn.softmax(scores, axis=-1)
+                return jnp.einsum("bl,ld->bd", w, k1)
+
+            def mlp_apply(x):
+                for li in range(nlayers):
+                    x = dense_apply(p[f"layer_{li}"], x)
+                    if li < nlayers - 1:
+                        x = jax.nn.relu(x)
+                return x
+
+            return _ta(q, keys, mask, mlp_apply)
+        if op == "act":
+            return ACTIVATIONS[n.attrs["fn"]](ins[0])
+        if op == "softmax":
+            return jax.nn.softmax(ins[0], axis=n.attrs.get("axis", -1))
+        if op == "reshape":
+            return ins[0].reshape((ins[0].shape[0],) + tuple(n.attrs["shape"]))
+        if op == "cast":
+            return ins[0].astype(n.attrs["dtype"])
+        if op in ("identity", "stop_gradient"):
+            return jax.lax.stop_gradient(ins[0]) if op == "stop_gradient" else ins[0]
+        if op == "reduce":
+            fn = {"sum": jnp.sum, "mean": jnp.mean, "max": jnp.max}[n.attrs["fn"]]
+            return fn(ins[0], axis=n.attrs["axis"])
+        if op == "weighted_sum":
+            w, v = ins
+            if w.shape[0] != v.shape[0]:
+                w, v = _bcast_batch([w, v])
+            return jnp.einsum("...k,...kd->...d", w, v)
+        if op == "cross_attention":
+            q, k, v = ins[0], ins[1], ins[2]
+            mask = ins[3] if n.attrs.get("has_mask") else None
+            squeeze = q.ndim == 2
+            if squeeze:
+                q = q[:, None, :]
+            out = cross_attention(q, k, v, mask)
+            return out[:, 0, :] if squeeze else out
+        if op == "fm_interaction":
+            x = ins[0]
+            s = x.sum(axis=-2)
+            sq = (x * x).sum(axis=-2)
+            return (0.5 * (s * s - sq).sum(axis=-1))[..., None]
+        if op == "dot_interaction":
+            x = ins[0]
+            f = x.shape[-2]
+            z = jnp.einsum("...fd,...gd->...fg", x, x)
+            iu, ju = jnp.triu_indices(f, k=0 if n.attrs.get("keep_self") else 1)
+            return z[..., iu, ju]
+        if op == "gather_last":
+            idx = jnp.asarray(n.attrs["indices"], jnp.int32)
+            return jnp.take(ins[0], idx, axis=-1)
+        if op == "stack_features":
+            xs = _bcast_batch(ins)
+            return jnp.stack(xs, axis=-2)
+        raise ValueError(f"executor: unknown op {op!r} ({n.name})")

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the recsys serving hot spots.
+
+Each subpackage ships: ``kernel.py`` (pl.pallas_call + explicit BlockSpec
+VMEM tiling), ``ops.py`` (jit'd public wrapper, padding/fallback logic) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps). Kernels are
+validated on CPU with ``interpret=True``; TPU is the compile target.
+"""
+from repro.kernels.mari_matmul.ops import mari_matmul_fused  # noqa: F401
+from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401
+from repro.kernels.dot_interaction.ops import dot_interaction  # noqa: F401
+from repro.kernels.din_attention.ops import din_attention  # noqa: F401

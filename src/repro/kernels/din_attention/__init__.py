@@ -1,0 +1,1 @@
+from repro.kernels.din_attention.ops import din_attention  # noqa: F401

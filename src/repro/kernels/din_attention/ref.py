@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: DIN local-activation target attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def din_attention_ref(query, keys, mask, w1, b1, w2, b2, w3, b3):
+    """query (B, D); keys (L, D); mask (L,) bool. MLP: 4D->h1->h2->1 (relu).
+    Returns (B, D) interest vector."""
+    B, D = query.shape
+    L = keys.shape[0]
+    k = jnp.broadcast_to(keys[None], (B, L, D))
+    q = jnp.broadcast_to(query[:, None, :], (B, L, D))
+    feats = jnp.concatenate([k, q, k - q, k * q], axis=-1)      # (B, L, 4D)
+    h = jax.nn.relu(feats @ w1 + b1)
+    h = jax.nn.relu(h @ w2 + b2)
+    scores = (h @ w3 + b3)[..., 0]                               # (B, L)
+    scores = jnp.where(mask[None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bl,ld->bd", w, keys)

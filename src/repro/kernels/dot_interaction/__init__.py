@@ -1,0 +1,1 @@
+from repro.kernels.dot_interaction.ops import dot_interaction  # noqa: F401

@@ -1,0 +1,55 @@
+"""DLRM dot-interaction as a TPU Pallas kernel.
+
+TPU adaptation (DESIGN.md §3): the triu *gather* that follows the F×F gram
+matrix is hostile to the TPU vector unit (strided lane shuffles). We instead
+select the upper triangle with a constant one-hot matrix multiply
+(F² × P selection matrix) — on TPU a small MXU matmul beats any gather.
+One batch tile per grid step; gram + selection fused in VMEM, so the (B,F,F)
+gram tensor never reaches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+
+def _make_selector(f: int, keep_self: bool) -> np.ndarray:
+    iu, ju = np.triu_indices(f, k=0 if keep_self else 1)
+    p = len(iu)
+    sel = np.zeros((f * f, p), np.float32)
+    sel[iu * f + ju, np.arange(p)] = 1.0
+    return sel
+
+
+def _kernel(x_ref, sel_ref, o_ref):
+    x = x_ref[...]                      # (bm, F, D)
+    z = jax.lax.dot_general(
+        x, x, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)         # (bm, F, F)
+    bm = z.shape[0]
+    flat = z.reshape(bm, -1)                        # (bm, F*F)
+    o_ref[...] = jnp.dot(flat, sel_ref[...],
+                         preferred_element_type=jnp.float32
+                         ).astype(o_ref.dtype)      # (bm, P)
+
+
+@functools.partial(jax.jit, static_argnames=("keep_self", "bm", "interpret"))
+def dot_interaction_kernel(x, *, keep_self: bool = False, bm: int = 128,
+                           interpret: bool = False):
+    B, F, D = x.shape
+    assert B % bm == 0, (B, bm)
+    sel = jnp.asarray(_make_selector(F, keep_self))
+    P = sel.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // bm,),
+        in_specs=[pl.BlockSpec((bm, F, D), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((F * F, P), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((bm, P), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, P), x.dtype),
+        interpret=interpret,
+    )(x, sel)

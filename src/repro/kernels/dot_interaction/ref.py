@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: DLRM pairwise-dot feature interaction."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def dot_interaction_ref(x, keep_self: bool = False):
+    """x (B, F, D) -> (B, P) upper-triangle pairwise dots."""
+    z = jnp.einsum("bfd,bgd->bfg", x, x)
+    f = x.shape[1]
+    iu, ju = jnp.triu_indices(f, k=0 if keep_self else 1)
+    return z[:, iu, ju]

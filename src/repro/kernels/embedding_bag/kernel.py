@@ -1,0 +1,54 @@
+"""EmbeddingBag as a TPU Pallas kernel — the recsys lookup hot path.
+
+TPU adaptation (DESIGN.md §3): there is no hardware gather into VMEM; the
+idiomatic pattern is *scalar-prefetched* BlockSpecs — the (sorted) id and
+segment arrays are prefetched to SMEM, and each grid step's BlockSpec
+index_map selects table row ``ids[i]`` and output row ``segments[i]``.
+Because the grid is sequential on TPU, consecutive steps that hit the same
+output row keep it resident in VMEM and accumulate — a row-streamed
+segment-sum with no HBM round-trips for the accumulator.
+
+Requires segment_ids sorted ascending (ops.py sorts); output rows whose
+segment is empty are never visited and are zeroed by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, seg_ref, row_ref, o_ref):
+    i = pl.program_id(0)
+    prev = seg_ref[jnp.maximum(i - 1, 0)]
+    first = jnp.where(i == 0, True, seg_ref[i] != prev)
+
+    @pl.when(first)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += row_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "interpret"))
+def embedding_bag_kernel(table, ids_sorted, seg_sorted, *, num_segments: int,
+                         interpret: bool = False):
+    """table (V, D); ids_sorted/seg_sorted (nnz,) with seg sorted ascending.
+    Returns (num_segments, D) sum-pooled rows (empty segments undefined —
+    wrapper masks them)."""
+    nnz = ids_sorted.shape[0]
+    D = table.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nnz,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, ids, seg: (ids[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, ids, seg: (seg[i], 0)),
+    )
+    return pl.pallas_call(
+        _kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((num_segments, D), table.dtype),
+        interpret=interpret,
+    )(ids_sorted, seg_sorted, table)

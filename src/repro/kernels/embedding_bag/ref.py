@@ -1,0 +1,15 @@
+"""Pure-jnp oracle: sum/mean-pooled multi-hot embedding lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, segment_ids, num_segments, combiner="sum"):
+    rows = jnp.take(table, ids, axis=0)
+    out = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, table.dtype), segment_ids,
+                                  num_segments=num_segments)
+        out = out / jnp.maximum(cnt, 1)[:, None]
+    return out

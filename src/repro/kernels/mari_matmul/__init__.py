@@ -1,0 +1,1 @@
+from repro.kernels.mari_matmul.ops import mari_matmul_fused  # noqa: F401

@@ -1,0 +1,60 @@
+"""MaRI matmul as a TPU Pallas kernel.
+
+TPU adaptation of Eq. 7 (DESIGN.md §3): the user-side product
+``u = x_user @ w_user`` is a single 1×d row — negligible FLOPs — so the
+kernel treats it as a *bias row*: the VMEM accumulator for each output tile
+initializes from the broadcast ``u`` tile instead of zeros, and the MXU only
+streams the item/cross operand ``x_rest @ w_rest``. ``Tile(u, B)`` never
+exists in HBM, and the epilogue add is fused into the matmul.
+
+Grid: (B/bm, d/bn, Dr/bk), k innermost; accumulator in f32 VMEM scratch.
+Block shapes are (8,128)-aligned for the MXU systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        # Eq. 7's Tile(x_u W_u, B): broadcast the user row into the tile.
+        acc_ref[...] = jnp.broadcast_to(
+            u_ref[...].astype(jnp.float32), acc_ref.shape)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mari_matmul_kernel(x_rest, w_rest, u_row, *, bm=128, bn=128, bk=512,
+                       interpret=False):
+    """x_rest (B, Dr) @ w_rest (Dr, d) + broadcast u_row (1, d).
+
+    Caller guarantees B % bm == 0, d % bn == 0, Dr % bk == 0 (ops.py pads).
+    """
+    B, Dr = x_rest.shape
+    d = w_rest.shape[1]
+    assert B % bm == 0 and d % bn == 0 and Dr % bk == 0, (B, Dr, d, bm, bn, bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=(B // bm, d // bn, Dr // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x tile
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w tile
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # user row tile
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, d), x_rest.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_rest, w_rest, u_row)

@@ -1,0 +1,48 @@
+"""Public fused-MaRI matmul op: pads to MXU-aligned tiles, computes the tiny
+user-side product with jnp (2·Du·d FLOPs), and dispatches the Pallas kernel
+for the batched side with the user row fused as accumulator init."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import round_up
+from repro.kernels.mari_matmul.kernel import mari_matmul_kernel
+
+_VMEM_BUDGET = 8 * 1024 * 1024  # bytes; conservative half of v5e VMEM
+
+
+def _pick_blocks(B: int, Dr: int, d: int, itemsize: int) -> tuple[int, int, int]:
+    bm = min(256, round_up(min(B, 256), 8))
+    bn = min(256, round_up(min(d, 256), 128))
+    bk = 512
+    while (bm * bk + bk * bn) * itemsize + bm * bn * 4 > _VMEM_BUDGET and bk > 128:
+        bk //= 2
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mari_matmul_fused(x_user, x_rest, w_user, w_rest, b=None, *,
+                      interpret=True):
+    """Eq. 7: Tile(x_user @ w_user, B) + x_rest @ w_rest (+ b).
+
+    x_user (1, Du), x_rest (B, Dr), w_user (Du, d), w_rest (Dr, d).
+    interpret=True on CPU (validation); False on real TPU.
+    """
+    B, Dr = x_rest.shape
+    d = w_rest.shape[1]
+    # user row computed and kept in f32 — it seeds the f32 accumulator, so
+    # rounding it to bf16 here would inject avoidable error (ulp(|u|)).
+    u = x_user.astype(jnp.float32) @ w_user.astype(jnp.float32)
+    if b is not None:
+        u = u + b.astype(jnp.float32)
+    bm, bn, bk = _pick_blocks(B, Dr, d, x_rest.dtype.itemsize)
+    Bp, Drp, dp = round_up(B, bm), round_up(Dr, bk), round_up(d, bn)
+    xp = jnp.pad(x_rest, ((0, Bp - B), (0, Drp - Dr)))
+    wp = jnp.pad(w_rest, ((0, Drp - Dr), (0, dp - d)))
+    up = jnp.pad(u, ((0, 0), (0, dp - d)))
+    out = mari_matmul_kernel(xp, wp, up, bm=bm, bn=bn, bk=bk,
+                             interpret=interpret)
+    return out[:B, :d]

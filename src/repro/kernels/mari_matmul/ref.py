@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the fused MaRI matmul (Eq. 7, two-group form)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mari_matmul_ref(x_user, x_rest, w_user, w_rest, b=None):
+    """x_user (1, Du), x_rest (B, Dr), w_user (Du, d), w_rest (Dr, d)."""
+    y = x_user.astype(jnp.float32) @ w_user.astype(jnp.float32) \
+        + x_rest.astype(jnp.float32) @ w_rest.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x_rest.dtype)

@@ -1,0 +1,274 @@
+"""Multi-pod dry-run: lower + compile every (architecture × input shape) on
+the single-pod 16x16 mesh and the 2x16x16 multi-pod mesh; record
+memory_analysis, cost_analysis and the collective schedule for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # subprocess per cell, JSON out
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse
+import json
+import re
+import subprocess
+import sys
+import time
+
+RESULTS_PATH = "experiments/dryrun_results.json"
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9          # per-link; single-link conservative assumption
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|((?:[a-z0-9]+)\[[0-9,]*\][^ ]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_SCALAR_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Per-device collective traffic with WHILE-LOOP TRIP COUNTS applied.
+
+    cost_analysis counts while bodies once; scan-over-layers would otherwise
+    undercount in-loop collectives by n_layers. We attribute every collective
+    def to its computation (headers sit at column 0, instructions are
+    indented), rebuild the while call graph (condition/body edges), read each
+    loop's trip count from the scalar integer literal in its condition, and
+    multiply body traffic through nested loops. Ring all-reduce moves ~2x
+    the buffer, others ~1x.
+    """
+    coll_bytes: dict[str, dict] = {}
+    consts: dict[str, int] = {}
+    whiles: list[tuple[str, str, str]] = []   # (parent, cond, body)
+    entry = None
+    cur = "?"
+    for line in hlo.splitlines():
+        if line and not line[0].isspace():
+            m = _HDR_RE.match(line.lstrip("%"))
+            mm = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if mm:
+                cur = mm.group(2)
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if m and "-done(" not in line:
+            d = coll_bytes.setdefault(cur, {
+                "all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+                "all-to-all": 0, "collective-permute": 0, "count": 0})
+            d[m.group(3)] += _shape_bytes(m.group(1) or m.group(2))
+            d["count"] += 1
+        m = _WHILE_RE.search(line)
+        if m:
+            whiles.append((cur, m.group(1), m.group(2)))
+        m = _SCALAR_CONST_RE.search(line)
+        if m:
+            consts[cur] = max(consts.get(cur, 1), int(m.group(1)))
+
+    # multipliers via while edges (iterate to fixpoint over nesting depth)
+    mult: dict[str, int] = {entry or "?": 1}
+    for _ in range(8):
+        changed = False
+        for parent, cond, body in whiles:
+            if parent in mult:
+                trip = consts.get(cond, 1)
+                new = mult[parent] * max(trip, 1)
+                if mult.get(body, 0) < new:
+                    mult[body] = new
+                    changed = True
+        if not changed:
+            break
+
+    total = {"all-reduce": 0, "all-gather": 0, "reduce-scatter": 0,
+             "all-to-all": 0, "collective-permute": 0, "count": 0}
+    for comp, d in coll_bytes.items():
+        f = mult.get(comp, 1)
+        for k in total:
+            total[k] += d[k] * (f if k != "count" else 1)
+    total["traffic_bytes"] = (2 * total["all-reduce"] + total["all-gather"]
+                              + total["reduce-scatter"] + total["all-to-all"]
+                              + total["collective-permute"])
+    total["max_loop_trip"] = max(mult.values(), default=1)
+    return total
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, opts=()) -> dict:
+    import jax
+
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    prog = build_cell(arch, shape, mesh, opts=opts)
+    with mesh:
+        lowered = prog.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned a list
+        cost = cost[0]
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    # cost_analysis counts while bodies ONCE; our scan-over-layers families
+    # need the trip-count factor applied (collectives get exact per-loop
+    # multipliers in parse_collectives; flops/bytes get the layer factor —
+    # in-loop work dominates, error is O(1/L); the flash-attention inner
+    # loops make the flops a LOWER bound for the attention component, see
+    # EXPERIMENTS.md §Roofline methodology).
+    from repro import configs as cfgreg
+    mod = cfgreg.get_config(arch)
+    if mod.FAMILY == "lm":
+        scan_factor = mod.CONFIG.n_layers
+    elif mod.FAMILY == "gnn":
+        scan_factor = mod.CONFIG.n_interactions
+    else:
+        scan_factor = 1
+
+    flops_raw = float(cost.get("flops", 0.0))
+    bytes_raw = float(cost.get("bytes accessed", 0.0))
+    flops = flops_raw * scan_factor
+    bytes_acc = bytes_raw * scan_factor
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_kind,
+        "opts": sorted(opts), "kind": prog.kind, "meta": prog.meta,
+        "devices": int(mesh.devices.size),
+        "scan_factor": scan_factor,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+        "cost": {"flops_per_device": flops, "bytes_per_device": bytes_acc,
+                 "flops_raw": flops_raw, "bytes_raw": bytes_raw},
+        "collectives": coll,
+        "roofline": {
+            "compute_s": flops / PEAK_FLOPS_BF16,
+            "memory_s": bytes_acc / HBM_BW,
+            "collective_s": coll["traffic_bytes"] / ICI_BW,
+        },
+    }
+    terms = rec["roofline"]
+    rec["roofline"]["bottleneck"] = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+    return rec
+
+
+def _cells(args):
+    from repro import configs as cfgreg
+
+    for cell in cfgreg.all_cells(include_paper=args.include_paper):
+        if args.arch and cell.arch != args.arch:
+            continue
+        if args.shape and cell.shape != args.shape:
+            continue
+        yield cell
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--all", action="store_true",
+                    help="run every cell in an isolated subprocess")
+    ap.add_argument("--include-paper", action="store_true",
+                    help="also run the paper's own ranking model")
+    ap.add_argument("--out", default=RESULTS_PATH)
+    ap.add_argument("--opts", default="",
+                    help="comma-separated §Perf optimization names")
+    ap.add_argument("--timeout", type=int, default=3600)
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        results = []
+        if os.path.exists(args.out):
+            results = json.load(open(args.out))
+        done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+                if "error" not in r}
+        for cell in _cells(args):
+            for mk in meshes:
+                if (cell.arch, cell.shape, mk) in done:
+                    continue
+                if cell.skip_reason:
+                    results.append({"arch": cell.arch, "shape": cell.shape,
+                                    "mesh": mk, "skipped": cell.skip_reason})
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", cell.arch, "--shape", cell.shape,
+                       "--mesh", mk]
+                print(f"[dryrun] {cell.arch} × {cell.shape} × {mk} ...",
+                      flush=True)
+                try:
+                    p = subprocess.run(cmd, capture_output=True, text=True,
+                                       timeout=args.timeout)
+                    line = p.stdout.strip().splitlines()[-1] if p.stdout.strip() else ""
+                    rec = json.loads(line) if line.startswith("{") else {
+                        "error": (p.stderr or p.stdout)[-2000:]}
+                except subprocess.TimeoutExpired:
+                    rec = {"error": f"timeout after {args.timeout}s"}
+                rec.update({"arch": cell.arch, "shape": cell.shape, "mesh": mk})
+                results = [r for r in results
+                           if (r["arch"], r["shape"], r["mesh"])
+                           != (cell.arch, cell.shape, mk)]
+                results.append(rec)
+                json.dump(results, open(args.out, "w"), indent=1)
+                status = ("OK" if "error" not in rec
+                          else "FAIL: " + rec["error"].splitlines()[-1][:120])
+                print(f"[dryrun]   -> {status}", flush=True)
+        nerr = sum(1 for r in results if "error" in r)
+        print(f"[dryrun] done: {len(results)} records, {nerr} failures")
+        return 1 if nerr else 0
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    for mk in meshes:
+        rec = run_cell(args.arch, args.shape, mk, opts=opts)
+        print(json.dumps(rec))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,393 @@
+"""Per-cell programs: for every (architecture × input shape) build the jitted
+step function, its ShapeDtypeStruct inputs, and the in/out shardings for a
+given mesh. The dry-run lowers+compiles these; train.py/serve.py execute them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import configs as cfgreg
+from repro.core.mari import mari_rewrite
+from repro.data.features import feed_specs
+from repro.dist.sharding import (
+    dp_axes, gnn_state_pspecs, lm_batch_pspec, lm_cache_pspecs,
+    lm_param_pspecs, lm_state_pspecs, named, recsys_feed_pspecs,
+    recsys_param_pspecs, recsys_state_pspecs, zero1_pspecs)
+from repro.graph.executor import Executor, init_graph_params
+from repro.models import schnet as schnet_mod
+from repro.models.transformer import (
+    LMConfig, init_lm_params, kv_cache_specs, lm_decode_step, lm_forward,
+    lm_loss)
+from repro.train.losses import bce_with_logits, softmax_xent
+from repro.train.optim import adam, adamw, apply_updates
+
+
+@dataclasses.dataclass
+class CellProgram:
+    arch: str
+    shape: str
+    kind: str
+    step_fn: Callable
+    args: tuple                      # ShapeDtypeStruct pytrees
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
+    policy_kv: dict = dataclasses.field(default_factory=dict)
+    mesh: Any = None
+
+    def jitted(self):
+        return jax.jit(self.step_fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
+    def lower(self):
+        import contextlib
+
+        from repro.dist import policy
+        ctx = (jax.set_mesh(self.mesh) if self.mesh is not None
+               else contextlib.nullcontext())
+        with policy.use(**self.policy_kv), ctx:
+            return self.jitted().lower(*self.args)
+
+
+def _opt_state_specs(opt, params_sds):
+    return jax.eval_shape(opt.init, params_sds)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def _lm_policy(mesh, opts) -> dict:
+    kv = {}
+    dp = dp_axes(mesh)
+    if "moe_local" in opts:
+        kv["moe_shard_axes"] = dp
+    if "seq_par" in opts:
+        from jax.sharding import NamedSharding
+        kv["residual"] = NamedSharding(mesh, P(dp, "model", None))
+    return kv
+
+
+def _lm_train(cfg: LMConfig, mesh, seq: int, global_batch: int,
+              opts=()) -> CellProgram:
+    opt = adamw(3e-4, master_weights=True)
+
+    def train_step(state, batch):
+        def loss_fn(p):
+            return lm_loss(p, cfg, batch["tokens"], batch["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        params = apply_updates(state["params"], updates)
+        return {"params": params, "opt": opt_state}, {"loss": loss}
+
+    params_sds = jax.eval_shape(
+        lambda: init_lm_params(cfg, jax.random.PRNGKey(0)))
+    opt_sds = _opt_state_specs(opt, params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((global_batch, seq), jnp.int32)}
+
+    pp = lm_param_pspecs(cfg)
+    zp = zero1_pspecs(pp, params_sds)
+    state_ps = {"params": pp,
+                "opt": {"mu": zp, "nu": zp, "master": zp, "step": P()}}
+    bp = lm_batch_pspec(mesh)
+    in_sh = (named(mesh, state_ps), named(mesh, {"tokens": bp, "labels": bp}))
+    out_sh = (named(mesh, state_ps), named(mesh, {"loss": P()}))
+    return CellProgram("", "", "train", train_step, (state_sds, batch_sds),
+                       in_sh, out_sh, donate_argnums=(0,),
+                       policy_kv=_lm_policy(mesh, opts))
+
+
+def _lm_prefill(cfg: LMConfig, mesh, seq: int, batch: int,
+                opts=()) -> CellProgram:
+    def prefill_step(params, tokens):
+        x, kv = lm_forward(params, cfg, tokens, return_kv=True)
+        logits = x[:, -1, :] @ params["lm_head"].astype(x.dtype)
+        return logits, kv
+
+    params_sds = jax.eval_shape(lambda: init_lm_params(cfg, jax.random.PRNGKey(0)))
+    tok_sds = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    pp = lm_param_pspecs(cfg)
+    dp = dp_axes(mesh)
+    cache_ps = lm_cache_pspecs(mesh, batch)["k"]
+    in_sh = (named(mesh, pp), named(mesh, P(dp, None)))
+    out_sh = (named(mesh, P(dp, "model")),
+              named(mesh, {"k": cache_ps, "v": cache_ps}))
+    return CellProgram("", "", "prefill", prefill_step, (params_sds, tok_sds),
+                       in_sh, out_sh, policy_kv=_lm_policy(mesh, opts))
+
+
+def _lm_decode(cfg: LMConfig, mesh, seq: int, batch: int) -> CellProgram:
+    def decode(params, cache, tokens, pos):
+        return lm_decode_step(params, cfg, cache, tokens, pos)
+
+    params_sds = jax.eval_shape(lambda: init_lm_params(cfg, jax.random.PRNGKey(0)))
+    cache_sds = kv_cache_specs(cfg, batch, seq)
+    tok_sds = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    pp = lm_param_pspecs(cfg)
+    dp = dp_axes(mesh)
+    cache_ps = named(mesh, lm_cache_pspecs(mesh, batch))
+    ndp = 1
+    for a in dp:
+        ndp *= mesh.shape[a]
+    tok_ps = named(mesh, P(dp if batch % ndp == 0 and batch >= ndp else None, None))
+    in_sh = (named(mesh, pp), cache_ps, tok_ps, named(mesh, P()))
+    out_sh = (named(mesh, P(None, None, "model")), cache_ps)
+    return CellProgram("", "", "decode", decode,
+                       (params_sds, cache_sds, tok_sds, pos_sds),
+                       in_sh, out_sh, donate_argnums=(1,))
+
+
+# ---------------------------------------------------------------------------
+# RecSys family
+# ---------------------------------------------------------------------------
+
+def _recsys_train(mod, mesh, batch: int, opts=()) -> CellProgram:
+    graph, _spec = mod.BUILD()
+    table_axes = ("model", "data") if "table_md" in opts else ("model",)
+    ex = Executor(graph, "vani")
+    outputs = list(graph.outputs)
+    opt = adam(1e-3)
+
+    grad_bf16 = "grad_bf16" in opts
+
+    def train_step(state, feeds, labels):
+        def loss_fn(p):
+            out = ex.run(p, feeds)
+            logits = jnp.concatenate([out[o] for o in outputs], axis=-1)
+            return bce_with_logits(logits, labels)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if grad_bf16:
+            # §Perf: halve the embedding-grad resharding traffic; adam
+            # moments still accumulate in f32 inside the optimizer.
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        updates, opt_state = opt.update(grads, state["opt"], state["params"])
+        return ({"params": apply_updates(state["params"], updates),
+                 "opt": opt_state}, {"loss": loss})
+
+    params_sds = jax.eval_shape(
+        lambda: init_graph_params(graph, jax.random.PRNGKey(0)))
+    if "emb_bf16" in opts:
+        # §Perf: bf16 embedding tables (f32 adam moments retained) — halves
+        # lookup-activation resharding traffic and table HBM footprint.
+        emb_nodes = {n.name for n in graph.param_nodes()
+                     if n.op == "embedding"}
+        params_sds = {
+            k: ({kk: jax.ShapeDtypeStruct(vv.shape, jnp.bfloat16)
+                 for kk, vv in v.items()} if k in emb_nodes else v)
+            for k, v in params_sds.items()}
+    opt_sds = _opt_state_specs(opt, params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+    feeds_sds = feed_specs(graph, batch, train=True)
+    labels_sds = jax.ShapeDtypeStruct((batch, len(outputs)), jnp.float32)
+
+    sp = recsys_state_pspecs(graph, table_axes=table_axes)
+    state_ps = {"params": sp["params"], "opt": sp["opt"]}
+    feeds_ps = recsys_feed_pspecs(graph, mesh, train=True)
+    in_sh = (named(mesh, state_ps), named(mesh, feeds_ps),
+             named(mesh, P(dp_axes(mesh), None)))
+    out_sh = (named(mesh, state_ps), named(mesh, {"loss": P()}))
+    return CellProgram("", "", "train", train_step,
+                       (state_sds, feeds_sds, labels_sds), in_sh, out_sh,
+                       donate_argnums=(0,))
+
+
+def _recsys_serve(mod, mesh, batch: int, use_mari: bool = True,
+                  mode: str = "uoi", opts=()) -> CellProgram:
+    graph, _spec = mod.BUILD()
+    meta = {}
+    # paper-baseline variants for the roofline comparison (Fig. 1 b/c):
+    if "serve_uoi" in opts:
+        use_mari, mode = False, "uoi"
+    if "serve_vani" in opts:
+        use_mari, mode = False, "vani"
+    if use_mari:
+        conv = mari_rewrite(graph,
+                            reparam_attention="attn_reparam" in opts)
+        graph = conv.graph
+        meta["mari_rewrites"] = [r.dense for r in conv.rewrites]
+        meta["attn_rewrites"] = [a.node for a in conv.attn_rewrites]
+        mode = "uoi"
+    ex = Executor(graph, mode)
+    outputs = list(graph.outputs)
+
+    def serve_step(params, feeds):
+        out = ex.run(params, feeds)
+        return jnp.concatenate([out[o] for o in outputs], axis=-1)
+
+    dtype = jnp.bfloat16 if "serve_bf16" in opts else jnp.float32
+    params_sds = jax.eval_shape(
+        lambda: init_graph_params(graph, jax.random.PRNGKey(0), dtype))
+    if "serve_full_dp" in opts:
+        # §Perf: serving has no TP need — fold 'model' into the candidate
+        # DP axes (16-32x more parallelism); pad B to a shardable multiple.
+        batch = ((batch + 511) // 512) * 512
+        cand_axes = dp_axes(mesh) + ("model",)
+        meta["padded_batch"] = batch
+    else:
+        cand_axes = dp_axes(mesh)
+    feeds_sds = feed_specs(graph, batch, train=False)
+    if "serve_bf16" in opts:
+        feeds_sds = {k: (jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
+                         if v.dtype == jnp.float32 else v)
+                     for k, v in feeds_sds.items()}
+    pp = recsys_param_pspecs(graph)
+    feeds_ps = {}
+    for n in graph.input_nodes():
+        rank = 1 + len(n.attrs["shape"])
+        lead = None if n.attrs.get("domain") == "user" else cand_axes
+        feeds_ps[n.name] = P(lead, *([None] * (rank - 1)))
+    in_sh = (named(mesh, pp), named(mesh, feeds_ps))
+    out_sh = named(mesh, P(cand_axes, None))
+    return CellProgram("", "", "serve", serve_step, (params_sds, feeds_sds),
+                       in_sh, out_sh, meta=meta)
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+def _pad_up(n: int, m: int = 1024) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _gnn_train(cfg, mesh, shape_spec: dict) -> CellProgram:
+    mode = shape_spec["mode"]
+    dp = dp_axes(mesh)
+    opt = adam(1e-3)
+
+    if mode in ("full", "sampled"):
+        n_classes = shape_spec["n_classes"]
+        d_feat = shape_spec["d_feat"]
+        scfg = dataclasses.replace(cfg, d_feat=d_feat, n_out=n_classes)
+        if mode == "full":
+            n_nodes, n_edges = shape_spec["n_nodes"], shape_spec["n_edges"]
+        else:
+            bn, fan = shape_spec["batch_nodes"], shape_spec["fanout"]
+            n, tot = bn, bn
+            e = 0
+            for f in fan:
+                n *= f
+                tot += n
+                e += n
+            n_nodes, n_edges = tot, e
+        # edge arrays pad to a DP-shardable length; padding carries mask=0
+        n_edges = _pad_up(n_edges)
+
+        def train_step(state, batch):
+            def loss_fn(p):
+                out = schnet_mod.schnet_forward(
+                    p, scfg, batch["features"], batch["positions"],
+                    batch["senders"], batch["receivers"],
+                    edge_mask=batch["edge_mask"])
+                if mode == "sampled":
+                    out = out[: shape_spec["batch_nodes"]]
+                    labels = batch["labels"][: shape_spec["batch_nodes"]]
+                else:
+                    labels = batch["labels"]
+                return softmax_xent(out, labels)
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            updates, opt_state = opt.update(grads, state["opt"], state["params"])
+            return ({"params": apply_updates(state["params"], updates),
+                     "opt": opt_state}, {"loss": loss})
+
+        batch_sds = {
+            "features": jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32),
+            "positions": jax.ShapeDtypeStruct((n_nodes, 3), jnp.float32),
+            "senders": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "receivers": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((n_edges,), jnp.bool_),
+            "labels": jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+        }
+        batch_ps = {"features": P(None, None), "positions": P(None, None),
+                    "senders": P(dp), "receivers": P(dp), "edge_mask": P(dp),
+                    "labels": P(None)}
+    else:  # molecule: batched energy regression
+        scfg = dataclasses.replace(cfg, d_feat=0, n_out=1)
+        ng = shape_spec["batch"]
+        n_nodes = ng * shape_spec["n_nodes"]
+        n_edges = _pad_up(ng * shape_spec["n_edges"])
+
+        def train_step(state, batch):
+            def loss_fn(p):
+                out = schnet_mod.schnet_forward(
+                    p, scfg, batch["atom_types"], batch["positions"],
+                    batch["senders"], batch["receivers"],
+                    edge_mask=batch["edge_mask"])
+                en = schnet_mod.schnet_graph_readout(out, batch["graph_ids"], ng)
+                return jnp.mean(jnp.square(en[:, 0] - batch["energies"]))
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            updates, opt_state = opt.update(grads, state["opt"], state["params"])
+            return ({"params": apply_updates(state["params"], updates),
+                     "opt": opt_state}, {"loss": loss})
+
+        batch_sds = {
+            "atom_types": jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+            "positions": jax.ShapeDtypeStruct((n_nodes, 3), jnp.float32),
+            "senders": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "receivers": jax.ShapeDtypeStruct((n_edges,), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((n_edges,), jnp.bool_),
+            "graph_ids": jax.ShapeDtypeStruct((n_nodes,), jnp.int32),
+            "energies": jax.ShapeDtypeStruct((ng,), jnp.float32),
+        }
+        batch_ps = {"atom_types": P(None), "positions": P(None, None),
+                    "senders": P(dp), "receivers": P(dp), "edge_mask": P(dp),
+                    "graph_ids": P(None), "energies": P(None)}
+
+    params_sds = jax.eval_shape(
+        lambda: schnet_mod.init_schnet_params(scfg, jax.random.PRNGKey(0)))
+    opt_sds = _opt_state_specs(opt, params_sds)
+    state_sds = {"params": params_sds, "opt": opt_sds}
+    sp = gnn_state_pspecs(params_sds)
+    state_ps = {"params": sp["params"], "opt": sp["opt"]}
+    in_sh = (named(mesh, state_ps), named(mesh, batch_ps))
+    out_sh = (named(mesh, state_ps), named(mesh, {"loss": P()}))
+    return CellProgram("", "", "train", train_step, (state_sds, batch_sds),
+                       in_sh, out_sh, donate_argnums=(0,))
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape: str, mesh, opts=(), **kw) -> CellProgram:
+    """opts: named §Perf optimizations — 'moe_local', 'seq_par',
+    'attn_reparam', 'serve_full_dp', 'serve_bf16'."""
+    opts = frozenset(opts)
+    mod = cfgreg.get_config(arch)
+    spec = mod.SHAPES[shape]
+    if spec.get("skip"):
+        raise ValueError(f"cell ({arch}, {shape}) is skipped: {spec['skip']}")
+    fam = mod.FAMILY
+    if fam == "lm":
+        cfg = mod.CONFIG
+        if spec["kind"] == "train":
+            prog = _lm_train(cfg, mesh, spec["seq"], spec["global_batch"],
+                             opts)
+        elif spec["kind"] == "prefill":
+            prog = _lm_prefill(cfg, mesh, spec["seq"], spec["global_batch"],
+                               opts)
+        else:
+            prog = _lm_decode(cfg, mesh, spec["seq"], spec["global_batch"])
+    elif fam == "recsys":
+        if spec["kind"] == "train":
+            prog = _recsys_train(mod, mesh, spec["batch"], opts=opts)
+        else:
+            prog = _recsys_serve(mod, mesh, spec["batch"], opts=opts, **kw)
+    elif fam == "gnn":
+        prog = _gnn_train(mod.CONFIG, mesh, spec)
+    else:
+        raise ValueError(fam)
+    prog.arch, prog.shape = arch, shape
+    prog.mesh = mesh
+    return prog

@@ -1,0 +1,10 @@
+from repro.models.recsys import (  # noqa: F401
+    RecSysSpec,
+    build_dlrm,
+    build_fm,
+    build_deepfm,
+    build_din,
+)
+from repro.models.ranking import build_paper_ranking_model, PaperRankingConfig  # noqa: F401
+from repro.models.transformer import LMConfig, init_lm_params, lm_forward  # noqa: F401
+from repro.models.schnet import SchNetConfig, init_schnet_params, schnet_forward  # noqa: F401

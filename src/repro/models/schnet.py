@@ -1,0 +1,122 @@
+"""SchNet [arXiv:1706.08566] — continuous-filter convolution GNN.
+
+Message passing is implemented the JAX-native way (no CSR sparse in JAX):
+edge-index gathers + ``jax.ops.segment_sum`` scatters — this IS the SpMM
+layer of the system. Interaction blocks are stacked and scanned.
+
+For the non-geometric assigned graphs (cora-like / ogbn-products) the data
+pipeline synthesizes 3D coordinates; SchNet then acts as a continuous-filter
+GNN over that embedding (DESIGN.md §4). Node features enter through a linear
+projection instead of the atom-type embedding when ``d_feat > 0``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, KeySeq, glorot, normal_init
+
+LOG2 = 0.6931471805599453
+
+
+def ssp(x: Array) -> Array:
+    """Shifted softplus, SchNet's activation."""
+    return jax.nn.softplus(x) - LOG2
+
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    d_feat: int = 0          # 0 => atom-type embedding input
+    n_atom_types: int = 100
+    n_out: int = 1           # classes (node tasks) or 1 (energy)
+
+    def scaled_down(self, **over) -> "SchNetConfig":
+        small = dict(n_interactions=2, d_hidden=16, n_rbf=8)
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+def init_schnet_params(cfg: SchNetConfig, key, dtype=jnp.float32) -> dict:
+    ks = KeySeq(key)
+    H, R, T = cfg.d_hidden, cfg.n_rbf, cfg.n_interactions
+
+    def w(shape):
+        return glorot(next(ks), shape, dtype)
+
+    if cfg.d_feat > 0:
+        inp = {"w": w((cfg.d_feat, H)), "b": jnp.zeros((H,), dtype)}
+    else:
+        inp = {"table": normal_init(next(ks), (cfg.n_atom_types, H), 0.1, dtype)}
+
+    def stacked(shape):
+        return jnp.stack([w(shape) for _ in range(T)])
+
+    inter = {
+        "filt_w1": stacked((R, H)), "filt_b1": jnp.zeros((T, H), dtype),
+        "filt_w2": stacked((H, H)), "filt_b2": jnp.zeros((T, H), dtype),
+        "in2f": stacked((H, H)),
+        "f2out_w1": stacked((H, H)), "f2out_b1": jnp.zeros((T, H), dtype),
+        "f2out_w2": stacked((H, H)), "f2out_b2": jnp.zeros((T, H), dtype),
+    }
+    readout = {"w1": w((H, H)), "b1": jnp.zeros((H,), dtype),
+               "w2": w((H, cfg.n_out)), "b2": jnp.zeros((cfg.n_out,), dtype)}
+    return {"input": inp, "interactions": inter, "readout": readout}
+
+
+def rbf_expand(d: Array, n_rbf: int, cutoff: float) -> Array:
+    """Gaussian radial basis over [0, cutoff]. d: (E,) -> (E, n_rbf)."""
+    mu = jnp.linspace(0.0, cutoff, n_rbf, dtype=d.dtype)
+    gamma = 10.0 / cutoff
+    return jnp.exp(-gamma * jnp.square(d[:, None] - mu[None, :]))
+
+
+def schnet_forward(
+    params: dict,
+    cfg: SchNetConfig,
+    node_input: Array,        # (N, d_feat) float or (N,) int atom types
+    positions: Array,         # (N, 3)
+    senders: Array,           # (E,)
+    receivers: Array,         # (E,)
+    edge_mask: Array | None = None,   # (E,) bool — padded sampled subgraphs
+) -> Array:
+    """Returns per-node outputs (N, n_out)."""
+    n_nodes = positions.shape[0]
+    if cfg.d_feat > 0:
+        h = node_input @ params["input"]["w"] + params["input"]["b"]
+    else:
+        h = jnp.take(params["input"]["table"], node_input, axis=0)
+
+    diff = positions[senders] - positions[receivers]          # (E, 3)
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1) + 1e-12)    # (E,)
+    rbf = rbf_expand(dist, cfg.n_rbf, cfg.cutoff)             # (E, R)
+    # smooth cutoff envelope
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(dist / cfg.cutoff, 0, 1)) + 1.0)
+    if edge_mask is not None:
+        env = env * edge_mask.astype(env.dtype)
+
+    def interaction(h, ip):
+        filt = ssp(rbf @ ip["filt_w1"] + ip["filt_b1"])
+        filt = (filt @ ip["filt_w2"] + ip["filt_b2"]) * env[:, None]   # (E, H)
+        src = h[senders] @ ip["in2f"]                                  # (E, H)
+        msg = src * filt
+        agg = jax.ops.segment_sum(msg, receivers, num_segments=n_nodes)
+        upd = ssp(agg @ ip["f2out_w1"] + ip["f2out_b1"])
+        upd = upd @ ip["f2out_w2"] + ip["f2out_b2"]
+        return h + upd, None
+
+    h, _ = jax.lax.scan(interaction, h, params["interactions"])
+    r = params["readout"]
+    out = ssp(h @ r["w1"] + r["b1"]) @ r["w2"] + r["b2"]
+    return out
+
+
+def schnet_graph_readout(node_out: Array, graph_ids: Array, n_graphs: int) -> Array:
+    """Molecule-level energy: sum node outputs per graph."""
+    return jax.ops.segment_sum(node_out, graph_ids, num_segments=n_graphs)

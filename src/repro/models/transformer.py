@@ -1,0 +1,428 @@
+"""Decoder-only LM family covering the five assigned architectures.
+
+Design points for 1000+-chip runnability:
+* ``lax.scan`` over stacked layer params — HLO size and compile time are
+  O(1 layer) even for deepseek-67b's 95 layers.
+* Flash-style block attention (online softmax, double ``lax.scan`` over Q/KV
+  chunks) — a 32k-token prefill never materializes an S×S score matrix.
+* Sliding-window attention (Mixtral) with a ring-buffer KV cache for the
+  524k-token long-context decode cell.
+* Sort-based capacity-dropped MoE dispatch — no (T, E, C) one-hot tensor.
+* Optional per-layer remat; activations compute in cfg.dtype (bf16 target).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, KeySeq, normal_init
+from repro.nn.layers import rms_norm
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None
+    qk_norm: bool = False
+    window: int | None = None          # sliding-window attention
+    moe_experts: int = 0
+    moe_top_k: int = 0
+    capacity_factor: float = 1.25
+    rope_theta: float = 1_000_000.0
+    dtype: str = "bfloat16"
+    remat: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    loss_chunk: int = 512              # vocab-projection chunking in the loss
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to 256 so embed/lm_head shard evenly over
+        ('model','data') (16×16 ZeRO). Padded logits are masked in the loss."""
+        return ((self.vocab + 255) // 256) * 256
+
+    @property
+    def is_moe(self) -> bool:
+        return self.moe_experts > 0
+
+    def scaled_down(self, **over) -> "LMConfig":
+        """Reduced config for CPU smoke tests."""
+        small = dict(
+            n_layers=2, d_model=64, n_heads=4,
+            n_kv_heads=max(1, self.n_kv_heads * 4 // self.n_heads),
+            d_ff=128, vocab=256, head_dim=16,
+            moe_experts=min(self.moe_experts, 4),
+            moe_top_k=min(self.moe_top_k, 2),
+            window=64 if self.window else None,
+            q_chunk=8, kv_chunk=8, loss_chunk=16, dtype="float32", remat=False)
+        small.update(over)
+        return dataclasses.replace(self, **small)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def init_lm_params(cfg: LMConfig, key, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    ks = KeySeq(key)
+    L, D, hd = cfg.n_layers, cfg.d_model, cfg.hd
+    hq, hkv, F = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+
+    def w(shape):
+        return normal_init(next(ks), shape, 0.02, dtype)
+
+    attn = {"wq": w((L, D, hq * hd)), "wk": w((L, D, hkv * hd)),
+            "wv": w((L, D, hkv * hd)), "wo": w((L, hq * hd, D))}
+    if cfg.qk_norm:
+        attn["q_norm"] = jnp.ones((L, hd), dtype)
+        attn["k_norm"] = jnp.ones((L, hd), dtype)
+
+    if cfg.is_moe:
+        E = cfg.moe_experts
+        ffn = {"router": w((L, D, E)), "wg": w((L, E, D, F)),
+               "wu": w((L, E, D, F)), "wd": w((L, E, F, D))}
+    else:
+        ffn = {"wg": w((L, D, F)), "wu": w((L, D, F)), "wd": w((L, F, D))}
+
+    return {
+        "embed": w((cfg.vocab_padded, D)),
+        "layers": {"attn": attn, "ffn": ffn,
+                   "ln1": jnp.ones((L, D), dtype), "ln2": jnp.ones((L, D), dtype)},
+        "final_norm": jnp.ones((D,), dtype),
+        "lm_head": w((D, cfg.vocab_padded)),
+    }
+
+
+def lm_param_specs(cfg: LMConfig, dtype=None):
+    """ShapeDtypeStruct tree (no allocation) — dry-run input."""
+    return jax.eval_shape(lambda: init_lm_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+# ---------------------------------------------------------------------------
+# RoPE (computed from positions on the fly — no 500k-row table)
+# ---------------------------------------------------------------------------
+
+def _rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (B, S, H, hd); positions: (B, S)."""
+    hd = x.shape[-1]
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B, S, hd/2)
+    c, s = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash-style block attention
+# ---------------------------------------------------------------------------
+
+def flash_attention(
+    q: Array,            # (B, Sq, Hq, hd)
+    k: Array,            # (B, Sk, Hkv, hd)
+    v: Array,            # (B, Sk, Hkv, hd)
+    q_pos: Array,        # (B, Sq)
+    kv_pos: Array,       # (B, Sk)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_valid: Array | None = None,   # (B, Sk) bool
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Array:
+    b, sq, hq, hd = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    assert sq % qc == 0 and sk % kc == 0, (sq, qc, sk, kc)
+    nq, nk = sq // qc, sk // kc
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(hd, jnp.float32))
+    # reshape to grouped heads: (B, S, Hkv, g, hd) treated as (B, S, Hkv*g, hd)
+    qr = q.reshape(b, nq, qc, hkv, g, hd)
+    kr = k.reshape(b, nk, kc, hkv, hd)
+    vr = v.reshape(b, nk, kc, hkv, hd)
+    qp = q_pos.reshape(b, nq, qc)
+    kp = kv_pos.reshape(b, nk, kc)
+    kval = (kv_valid.reshape(b, nk, kc) if kv_valid is not None
+            else jnp.ones((b, nk, kc), bool))
+
+    def q_block(carry, qi):
+        qb = qr[:, qi]            # (B, qc, Hkv, g, hd)
+        qpb = qp[:, qi]           # (B, qc)
+
+        def kv_block(state, ki):
+            m, l, acc = state
+            kb, vb = kr[:, ki], vr[:, ki]          # (B, kc, Hkv, hd)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb).astype(jnp.float32) * scale
+            dist = qpb[:, :, None] - kp[:, ki][:, None, :]    # (B, qc, kc)
+            msk = kval[:, ki][:, None, :]
+            if causal:
+                msk = msk & (dist >= 0)
+            if window is not None:
+                msk = msk & (dist < window)
+            s = jnp.where(msk[:, None, None, :, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(vb.dtype), vb)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, qc, hd), q.dtype)
+        (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, qc, hq, hd)
+        return carry, out
+
+    _, outs = jax.lax.scan(q_block, (), jnp.arange(nq))   # (nq, B, qc, Hq, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, hd)
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN — sort-based dispatch with capacity dropping (no one-hot tensor)
+# ---------------------------------------------------------------------------
+
+def moe_ffn(x: Array, ffn: dict, cfg: LMConfig, tp_axis: str | None = None
+            ) -> Array:
+    """x: (T, D) -> (T, D).
+
+    tp_axis: inside a fully-manual shard_map, expert weights arrive F-sharded
+    (wg/wu on their last dim, wd on its contraction dim); the output is a
+    partial sum that must be psum'd over ``tp_axis`` after the combine."""
+    T, D = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    C = max(1, int(T * k * cfg.capacity_factor / E))
+
+    logits = (x @ ffn["router"].astype(x.dtype)).astype(jnp.float32)   # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(topv, axis=-1)                              # (T, k)
+
+    fe = topi.reshape(-1)                                 # (T*k,) expert ids
+    ft = jnp.repeat(jnp.arange(T), k)                     # (T*k,) token ids
+    fg = gates.reshape(-1)
+    order = jnp.argsort(fe)
+    se, st, sg = fe[order], ft[order], fg[order]
+    counts = jnp.bincount(se, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(T * k) - starts[se]
+    keep = pos < C
+    # dropped entries route to a dummy row E*C so they can never clobber a
+    # kept token's slot.
+    slot = jnp.where(keep, se * C + pos, E * C)
+
+    xd = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(x[st])
+    xd = xd[: E * C].reshape(E, C, D)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xd, ffn["wg"].astype(x.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xd, ffn["wu"].astype(x.dtype))
+    yd = jnp.einsum("ecf,efd->ecd", h, ffn["wd"].astype(x.dtype)).reshape(E * C, D)
+
+    contrib = yd[slot] * (sg * keep).astype(x.dtype)[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[st].add(contrib)
+    if tp_axis is not None:
+        y = jax.lax.psum(y, tp_axis)   # TP reduction after the combine
+    return y
+
+
+def dense_ffn(x: Array, ffn: dict, cfg: LMConfig) -> Array:
+    h = jax.nn.silu(x @ ffn["wg"].astype(x.dtype)) * (x @ ffn["wu"].astype(x.dtype))
+    return h @ ffn["wd"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Transformer block + full forward
+# ---------------------------------------------------------------------------
+
+def _attn_block(x, lp, cfg: LMConfig, positions, kv_state=None,
+                return_kv: bool = False):
+    """x: (B, S, D). kv_state: None (full-seq) or dict with cache (decode)."""
+    b, s, D = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    attn = lp["attn"]
+    xn = rms_norm(x, lp["ln1"].astype(x.dtype))
+    q = (xn @ attn["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k = (xn @ attn["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = (xn @ attn["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, attn["q_norm"].astype(x.dtype))
+        k = rms_norm(k, attn["k_norm"].astype(x.dtype))
+    q = _rope(q, positions, cfg.rope_theta)
+    k = _rope(k, positions, cfg.rope_theta)
+
+    if kv_state is None:
+        out = flash_attention(q, k, v, positions, positions, causal=True,
+                              window=cfg.window, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk)
+        new_kv = (k, v) if return_kv else None
+    else:
+        kc, vc, slot, kv_pos, kv_valid = (
+            kv_state["k"], kv_state["v"], kv_state["slot"],
+            kv_state["pos"], kv_state["valid"])
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+        out = flash_attention(q, kc.astype(x.dtype), vc.astype(x.dtype),
+                              positions, kv_pos, causal=True, window=cfg.window,
+                              kv_valid=kv_valid, q_chunk=cfg.q_chunk,
+                              kv_chunk=cfg.kv_chunk)
+        new_kv = (kc, vc)
+    out = out.reshape(b, s, hq * hd) @ attn["wo"].astype(x.dtype)
+    return x + out, new_kv
+
+
+def _ffn_block(x, lp, cfg: LMConfig):
+    from repro.dist import policy
+    b, s, D = x.shape
+    xn = rms_norm(x, lp["ln2"].astype(x.dtype))
+    if cfg.is_moe:
+        xs = xn.reshape(b * s, D)
+        axes = policy.get("moe_shard_axes")
+        if axes:
+            # §Perf 'moe_local': fully-manual shard_map — routing (sort,
+            # capacity, scatter) is local to each DP shard; expert weights
+            # arrive F-sharded over 'model' and the combine psums over TP.
+            from jax.sharding import PartitionSpec as P
+            spec_x = P(axes, None)
+            wspecs = {"router": P(None, None),
+                      "wg": P(None, None, "model"),
+                      "wu": P(None, None, "model"),
+                      "wd": P(None, "model", None)}
+            y = jax.shard_map(
+                lambda xx, ff: moe_ffn(xx, ff, cfg, tp_axis="model"),
+                in_specs=(spec_x, wspecs), out_specs=spec_x)(xs, lp["ffn"])
+        else:
+            y = moe_ffn(xs, lp["ffn"], cfg)
+        y = y.reshape(b, s, D)
+    else:
+        y = dense_ffn(xn, lp["ffn"], cfg)
+    return x + y
+
+
+def lm_forward(params: dict, cfg: LMConfig, tokens: Array,
+               positions: Array | None = None, return_kv: bool = False):
+    """Full-sequence forward. tokens: (B, S) -> final hidden (B, S, D).
+    With ``return_kv`` also returns the per-layer K/V (prefill cache fill)."""
+    dt = jnp.dtype(cfg.dtype)
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+
+    def layer(x, lp):
+        from repro.dist import policy
+        x, kv = _attn_block(x, lp, cfg, positions, return_kv=return_kv)
+        x = _ffn_block(x, lp, cfg)
+        # §Perf 'seq_par': sequence-parallel residual layout — the scan
+        # carry (and remat save) shrinks by the TP degree.
+        x = policy.constrain(x, "residual")
+        return x, kv
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer, prevent_cse=False)
+    x, kvs = jax.lax.scan(layer, x, params["layers"])
+    x = rms_norm(x, params["final_norm"].astype(dt))
+    if return_kv:
+        return x, {"k": kvs[0], "v": kvs[1]}
+    return x
+
+
+def lm_logits(params: dict, cfg: LMConfig, tokens: Array) -> Array:
+    x = lm_forward(params, cfg, tokens)
+    return x @ params["lm_head"].astype(x.dtype)
+
+
+def lm_loss(params: dict, cfg: LMConfig, tokens: Array, labels: Array) -> Array:
+    """Chunked-vocab cross entropy — never materializes (B, S, V) at once."""
+    x = lm_forward(params, cfg, tokens)          # (B, S, D)
+    b, s, D = x.shape
+    c = min(cfg.loss_chunk, s)
+    assert s % c == 0
+    head = params["lm_head"]
+
+    def chunk_loss(i):
+        xs = jax.lax.dynamic_slice_in_dim(x, i * c, c, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * c, c, axis=1)
+        logits = (xs @ head.astype(xs.dtype)).astype(jnp.float32)
+        if cfg.vocab_padded != cfg.vocab:  # mask the padding columns
+            pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ls[..., None], axis=-1)[..., 0]
+        return (logz - gold).sum()
+
+    total = jax.lax.map(chunk_loss, jnp.arange(s // c)).sum()
+    return total / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache decode
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    """Cache capacity = window (ring buffer) for SWA archs, else max_len."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    W = min(cfg.window, max_len) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def kv_cache_specs(cfg: LMConfig, batch: int, max_len: int, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    W = min(cfg.window, max_len) if cfg.window else max_len
+    shape = (cfg.n_layers, batch, W, cfg.n_kv_heads, cfg.hd)
+    return {"k": jax.ShapeDtypeStruct(shape, dtype),
+            "v": jax.ShapeDtypeStruct(shape, dtype)}
+
+
+def lm_decode_step(params: dict, cfg: LMConfig, cache: dict,
+                   tokens: Array, pos: Array) -> tuple[Array, dict]:
+    """One decode step. tokens: (B, 1); pos: scalar int32 — number of tokens
+    already in the cache (uniform across batch, standard batched serving).
+    Returns (logits (B, 1, V), new cache)."""
+    dt = jnp.dtype(cfg.dtype)
+    b = tokens.shape[0]
+    W = cache["k"].shape[2]
+    slot = (pos % W).astype(jnp.int32)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+
+    # slot j currently holds absolute position: pos - ((slot - j) mod W),
+    # once we've written the new token at `slot`.
+    j = jnp.arange(W, dtype=jnp.int32)
+    kv_pos = pos - ((slot - j) % W)
+    valid = kv_pos >= 0
+    kv_pos_b = jnp.broadcast_to(kv_pos[None], (b, W))
+    valid_b = jnp.broadcast_to(valid[None], (b, W))
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)   # (B, 1, D)
+
+    def layer(x, per):
+        lp, kc, vc = per
+        kv_state = {"k": kc, "v": vc, "slot": slot, "pos": kv_pos_b,
+                    "valid": valid_b}
+        x, (knew, vnew) = _attn_block(x, lp, cfg, positions, kv_state)
+        x = _ffn_block(x, lp, cfg)
+        return x, (knew, vnew)
+
+    x, (knew, vnew) = jax.lax.scan(layer, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["final_norm"].astype(dt))
+    logits = x @ params["lm_head"].astype(dt)
+    return logits, {"k": knew, "v": vnew}

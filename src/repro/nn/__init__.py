@@ -1,0 +1,16 @@
+from repro.nn.layers import (  # noqa: F401
+    Dense,
+    MLP,
+    LayerNorm,
+    RMSNorm,
+    dense_apply,
+    act,
+)
+from repro.nn.embedding import Embedding, EmbeddingBag, embedding_bag_lookup  # noqa: F401
+from repro.nn.attention import (  # noqa: F401
+    rope_freqs,
+    apply_rope,
+    gqa_attention,
+    target_attention,
+    cross_attention,
+)

@@ -1,0 +1,86 @@
+"""Embedding tables and EmbeddingBag.
+
+JAX has no native EmbeddingBag / CSR sparse — we implement the standard
+industrial pattern: ``jnp.take`` over the table + ``jax.ops.segment_sum``
+pooling over a flattened (values, segment_ids) multi-hot encoding. This IS
+part of the system (recsys hot path); the Pallas kernel in
+``repro/kernels/embedding_bag`` accelerates the same contract on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, normal_init
+
+
+@dataclasses.dataclass(frozen=True)
+class Embedding:
+    """Plain single-id lookup table."""
+
+    vocab: int
+    dim: int
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        return {"table": normal_init(key, (self.vocab, self.dim), 0.02, dtype)}
+
+    def apply(self, params: dict, ids: Array) -> Array:
+        return jnp.take(params["table"], ids, axis=0)
+
+
+def embedding_bag_lookup(
+    table: Array,
+    ids: Array,
+    segment_ids: Array,
+    num_segments: int,
+    *,
+    combiner: str = "sum",
+    weights: Array | None = None,
+) -> Array:
+    """Pooled multi-hot lookup.
+
+    table: (V, D); ids: (nnz,) flat indices into table; segment_ids: (nnz,)
+    row each id belongs to (sorted or not); returns (num_segments, D).
+    """
+    rows = jnp.take(table, ids, axis=0)  # (nnz, D)
+    if weights is not None:
+        rows = rows * weights[:, None]
+    summed = jax.ops.segment_sum(rows, segment_ids, num_segments=num_segments)
+    if combiner == "sum":
+        return summed
+    if combiner == "mean":
+        counts = jax.ops.segment_sum(
+            jnp.ones((ids.shape[0],), table.dtype), segment_ids, num_segments=num_segments
+        )
+        return summed / jnp.maximum(counts, 1.0)[:, None]
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingBag:
+    """Multi-hot pooled embedding (sum/mean combiner), torch.EmbeddingBag contract."""
+
+    vocab: int
+    dim: int
+    combiner: str = "sum"
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        scale = 1.0 / max(self.vocab, 1) ** 0.5
+        return {"table": normal_init(key, (self.vocab, self.dim), scale, dtype)}
+
+    def apply(self, params: dict, ids: Array, segment_ids: Array, num_segments: int,
+              weights: Array | None = None) -> Array:
+        return embedding_bag_lookup(
+            params["table"], ids, segment_ids, num_segments,
+            combiner=self.combiner, weights=weights,
+        )
+
+    def apply_dense(self, params: dict, ids: Array) -> Array:
+        """Fixed-hot (B, H) id matrix variant — pools along axis 1."""
+        rows = jnp.take(params["table"], ids, axis=0)  # (B, H, D)
+        pooled = rows.sum(axis=1)
+        if self.combiner == "mean":
+            pooled = pooled / ids.shape[1]
+        return pooled

@@ -1,0 +1,111 @@
+"""Functional NN layers (no flax in this environment — init/apply dataclasses).
+
+Params are plain dicts of jnp arrays so they checkpoint / shard trivially.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, KeySeq, glorot
+
+ACTIVATIONS: dict[str, Callable[[Array], Array]] = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "identity": lambda x: x,
+}
+
+
+def act(name: str, x: Array) -> Array:
+    return ACTIVATIONS[name](x)
+
+
+def dense_apply(params: dict, x: Array) -> Array:
+    """y = x @ w (+ b). w: (D_in, D_out)."""
+    y = x @ params["w"]
+    if "b" in params:
+        y = y + params["b"]
+    return y
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    in_dim: int
+    out_dim: int
+    use_bias: bool = True
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        p = {"w": glorot(key, (self.in_dim, self.out_dim), dtype)}
+        if self.use_bias:
+            p["b"] = jnp.zeros((self.out_dim,), dtype)
+        return p
+
+    def apply(self, params: dict, x: Array) -> Array:
+        return dense_apply(params, x)
+
+
+@dataclasses.dataclass(frozen=True)
+class MLP:
+    """Stack of Dense layers with activation between (and optionally after)."""
+
+    dims: Sequence[int]  # [in, h1, h2, ..., out]
+    activation: str = "relu"
+    final_activation: str = "identity"
+    use_bias: bool = True
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        ks = KeySeq(key)
+        layers = {}
+        for i, (din, dout) in enumerate(zip(self.dims[:-1], self.dims[1:])):
+            layers[f"layer_{i}"] = Dense(din, dout, self.use_bias).init(next(ks), dtype)
+        return layers
+
+    def apply(self, params: dict, x: Array) -> Array:
+        n = len(self.dims) - 1
+        for i in range(n):
+            x = dense_apply(params[f"layer_{i}"], x)
+            name = self.activation if i < n - 1 else self.final_activation
+            x = act(name, x)
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerNorm:
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        del key
+        return {"scale": jnp.ones((self.dim,), dtype), "bias": jnp.zeros((self.dim,), dtype)}
+
+    def apply(self, params: dict, x: Array) -> Array:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.var(x, axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        return y * params["scale"] + params["bias"]
+
+
+@dataclasses.dataclass(frozen=True)
+class RMSNorm:
+    dim: int
+    eps: float = 1e-6
+
+    def init(self, key: Array, dtype=jnp.float32) -> dict:
+        del key
+        return {"scale": jnp.ones((self.dim,), dtype)}
+
+    def apply(self, params: dict, x: Array) -> Array:
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps).astype(x.dtype)
+        return y * params["scale"]
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale

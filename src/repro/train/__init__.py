@@ -1,0 +1,2 @@
+from repro.train.optim import sgd, adam, adamw, adafactor, Optimizer, clip_by_global_norm  # noqa: F401
+from repro.train.losses import bce_with_logits, softmax_xent, auc  # noqa: F401

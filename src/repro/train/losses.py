@@ -1,0 +1,48 @@
+"""Losses and ranking metrics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import Array
+
+
+def bce_with_logits(logits: Array, labels: Array, weights: Array | None = None) -> Array:
+    """Numerically stable binary cross-entropy over logits."""
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    per = jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    if weights is not None:
+        per = per * weights
+        return per.sum() / jnp.maximum(weights.sum(), 1.0)
+    return per.mean()
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    """logits: (..., V); labels: (...) int ids. Mean NLL."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def auc(scores, labels) -> float:
+    """Exact ROC-AUC via rank statistic (numpy, for eval-time use)."""
+    scores = np.asarray(scores, np.float64).ravel()
+    labels = np.asarray(labels).ravel()
+    pos = scores[labels == 1]
+    neg = scores[labels == 0]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    order = np.argsort(np.concatenate([pos, neg]), kind="mergesort")
+    ranks = np.empty_like(order, dtype=np.float64)
+    # average ranks for ties
+    s = np.concatenate([pos, neg])[order]
+    ranks[order] = np.arange(1, len(s) + 1)
+    _, inv, cnt = np.unique(s, return_inverse=True, return_counts=True)
+    sums = np.zeros(len(cnt))
+    np.add.at(sums, inv, ranks)
+    ranks = (sums / cnt)[inv]
+    r_pos = ranks[: len(pos)].sum()
+    return float((r_pos - len(pos) * (len(pos) + 1) / 2) / (len(pos) * len(neg)))

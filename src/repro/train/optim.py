@@ -1,0 +1,173 @@
+"""Optimizers, built in-repo (optax is not available in this environment).
+
+API mirrors the (init, update) gradient-transformation style so optimizer
+states are plain pytrees — shardable with pjit and checkpointable as-is.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import Array, PyTree
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params) -> (updates, new_opt_state);
+    # apply with: params = tree_map(lambda p, u: p + u, params, updates)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gnorm
+
+
+def sgd(lr: float, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params):
+        del params
+        if momentum == 0.0:
+            return jax.tree_util.tree_map(lambda g: -lr * g, grads), ()
+        new_m = jax.tree_util.tree_map(lambda m, g: momentum * m + g, state, grads)
+        return jax.tree_util.tree_map(lambda m: -lr * m, new_m), new_m
+
+    return Optimizer(init, update)
+
+
+def adam(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    return adamw(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01, master_weights: bool = False) -> Optimizer:
+    """AdamW. With ``master_weights=True`` the state carries an f32 master
+    copy of the params (mixed-precision training: params may live in bf16,
+    updates are applied to the master and re-cast) — combined with ZeRO
+    sharding of the state this is the standard large-scale setup.
+    """
+    def init(params):
+        z = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        st = {"mu": z, "nu": jax.tree_util.tree_map(jnp.zeros_like, z),
+              "step": jnp.zeros((), jnp.int32)}
+        if master_weights:
+            st["master"] = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        b1t = 1.0 - b1 ** step.astype(jnp.float32)
+        b2t = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p, w):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            mhat = m / b1t
+            vhat = v / b2t
+            delta = -lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * w)
+            if master_weights:
+                w_new = w + delta
+                return (w_new.astype(p.dtype) - p, m, v, w_new)
+            return (delta.astype(p.dtype), m, v, None)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_v = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        if master_weights:
+            flat_w = treedef.flatten_up_to(state["master"])
+        else:
+            flat_w = [p.astype(jnp.float32) for p in flat_p]
+        out = [upd(g, m, v, p, w)
+               for g, m, v, p, w in zip(flat_g, flat_m, flat_v, flat_p, flat_w)]
+        updates = treedef.unflatten([o[0] for o in out])
+        new_state = {
+            "mu": treedef.unflatten([o[1] for o in out]),
+            "nu": treedef.unflatten([o[2] for o in out]),
+            "step": step,
+        }
+        if master_weights:
+            new_state["master"] = treedef.unflatten([o[3] for o in out])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer — O(n+m) state for (n,m) matrices.
+
+    The memory-lean choice for billion-row embedding tables at scale.
+    """
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"m": jax.tree_util.tree_map(st, params,
+                                            is_leaf=lambda x: isinstance(x, jax.Array)),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g * jax.lax.rsqrt(jnp.maximum(r * vc[..., None, :], eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), new_s
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state["m"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        return (treedef.unflatten([o[0] for o in out]),
+                {"m": treedef.unflatten([o[1] for o in out]), "step": step})
+
+    return Optimizer(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class WarmupCosine:
+    peak_lr: float
+    warmup_steps: int
+    total_steps: int
+    min_ratio: float = 0.1
+
+    def __call__(self, step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(self.warmup_steps, 1)
+        prog = (step - self.warmup_steps) / jnp.maximum(
+            self.total_steps - self.warmup_steps, 1)
+        cos = self.min_ratio + (1 - self.min_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * jnp.clip(prog, 0.0, 1.0)))
+        return self.peak_lr * jnp.where(step < self.warmup_steps, warm, cos)

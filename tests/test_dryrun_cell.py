@@ -1,0 +1,32 @@
+"""Dry-run regression test: one real (arch × shape × mesh) cell compiles on
+the 256-device production mesh in a subprocess (the 512-host-device flag
+must never leak into this test process)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+
+def test_single_cell_dryrun_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    p = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "fm", "--shape", "serve_p99", "--mesh", "single"],
+        capture_output=True, text=True, timeout=600, env=env)
+    assert p.returncode == 0, p.stderr[-2000:]
+    rec = json.loads(p.stdout.strip().splitlines()[-1])
+    assert rec["devices"] == 256
+    assert rec["kind"] == "serve"
+    assert rec["roofline"]["bottleneck"] in (
+        "compute_s", "memory_s", "collective_s")
+    assert rec["cost"]["flops_per_device"] > 0
+    # MaRI conversion must have fired inside the cell build
+    assert rec["meta"] == {} or "mari_rewrites" in rec["meta"]
+
+
+def test_flag_isolation():
+    """This process must still see exactly ONE device (conftest guarantee)."""
+    assert len(jax.devices()) == 1

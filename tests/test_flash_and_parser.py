@@ -1,0 +1,142 @@
+"""Extra coverage: flash block attention vs a naive oracle (the LM-family
+compute core), and the dry-run HLO collective parser (trip-count logic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.transformer import flash_attention
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, causal, window, kv_valid=None):
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    hq, hkv = q.shape[2], k.shape[2]
+    g = hq // hkv
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) * scale
+    dist = q_pos[:, :, None] - kv_pos[:, None, :]
+    mask = jnp.ones_like(dist, bool)
+    if causal:
+        mask &= dist >= 0
+    if window is not None:
+        mask &= dist < window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    p = jax.nn.softmax(logits, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), vv)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("s,window,qc,kc", [
+        (32, None, 8, 8), (32, 8, 8, 16), (64, 16, 16, 8), (32, None, 32, 32),
+    ])
+    @pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+    def test_matches_naive(self, s, window, qc, kc, hq, hkv):
+        b, hd = 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(s + hq), 3)
+        q = jax.random.normal(ks[0], (b, s, hq, hd))
+        k = jax.random.normal(ks[1], (b, s, hkv, hd))
+        v = jax.random.normal(ks[2], (b, s, hkv, hd))
+        pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        out = flash_attention(q, k, v, pos, pos, causal=True, window=window,
+                              q_chunk=qc, kv_chunk=kc)
+        ref = naive_attention(q, k, v, pos, pos, True, window)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    @given(seed=st.integers(0, 2**30), sq=st.sampled_from([8, 16]),
+           sk=st.sampled_from([16, 32]))
+    @settings(max_examples=10, deadline=None)
+    def test_cross_lengths_with_validity(self, seed, sq, sk):
+        """Decode-style: query shorter than KV, ring-buffer validity mask."""
+        b, hq, hkv, hd = 1, 4, 2, 8
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (b, sq, hq, hd))
+        k = jax.random.normal(ks[1], (b, sk, hkv, hd))
+        v = jax.random.normal(ks[2], (b, sk, hkv, hd))
+        q_pos = jnp.broadcast_to(jnp.arange(sk - sq, sk)[None], (b, sq))
+        kv_pos = jnp.broadcast_to(jnp.arange(sk)[None], (b, sk))
+        valid = jax.random.bernoulli(ks[3], 0.8, (b, sk)).at[:, -1].set(True)
+        out = flash_attention(q, k, v, q_pos, kv_pos, causal=True,
+                              window=None, kv_valid=valid, q_chunk=8,
+                              kv_chunk=8)
+        ref = naive_attention(q, k, v, q_pos, kv_pos, True, None, valid)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+class TestCollectiveParser:
+    def test_trip_count_multiplication(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+%cond.1 (p: (s32[])) -> pred[] {
+  %p = (s32[]) parameter(0)
+  %it = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(7)
+  ROOT %lt = pred[] compare(%it, %c), direction=LT
+}
+
+%body.1 (p: (s32[])) -> (s32[]) {
+  %p = (s32[]) parameter(0)
+  %ar = f32[1024,256] all-reduce(%x), to_apply=%sum
+  ROOT %t = (s32[]) tuple(%it)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %ag = f32[2048] all-gather(%a), dimensions={0}
+  %w = (s32[]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[8] add(%a, %a)
+}
+"""
+        out = parse_collectives(hlo)
+        # all-reduce inside the 7-trip loop: 1024*256*4 bytes * 7 * 2 (ring)
+        assert out["all-reduce"] == 1024 * 256 * 4 * 7
+        assert out["all-gather"] == 2048 * 4
+        assert out["max_loop_trip"] == 7
+        assert out["traffic_bytes"] == 2 * out["all-reduce"] + out["all-gather"]
+
+    def test_nested_loops(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+%cond_in (p: (s32[])) -> pred[] {
+  %c = s32[] constant(3)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body_in (p: (s32[])) -> (s32[]) {
+  %cp = bf16[64] collective-permute(%x), source_target_pairs={{0,1}}
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+%cond_out (p: (s32[])) -> pred[] {
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body_out (p: (s32[])) -> (s32[]) {
+  %w2 = (s32[]) while(%init2), condition=%cond_in, body=%body_in
+  ROOT %t = (s32[]) tuple(%i)
+}
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %w = (s32[]) while(%init), condition=%cond_out, body=%body_out
+  ROOT %r = f32[4] add(%a, %a)
+}
+"""
+        out = parse_collectives(hlo)
+        assert out["collective-permute"] == 64 * 2 * 15   # bf16, 3*5 trips
+        assert out["max_loop_trip"] == 15
+
+    def test_done_ops_not_double_counted(self):
+        from repro.launch.dryrun import parse_collectives
+        hlo = """
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %s = f32[1024] all-gather-start(%a), dimensions={0}
+  %d = f32[1024] all-gather-done(%s)
+  ROOT %r = f32[8] add(%a, %a)
+}
+"""
+        out = parse_collectives(hlo)
+        assert out["all-gather"] == 1024 * 4
+        assert out["count"] == 1

@@ -1,0 +1,140 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode).
+
+Shapes sweep odd/aligned sizes and dtypes per the kernel contract.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (din_attention, dot_interaction, embedding_bag,
+                           mari_matmul_fused)
+from repro.kernels.din_attention.ref import din_attention_ref
+from repro.kernels.dot_interaction.ref import dot_interaction_ref
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.mari_matmul.ref import mari_matmul_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-4, atol=2e-4)
+
+
+class TestMariMatmul:
+    @pytest.mark.parametrize("B,Du,Dr,d", [
+        (1, 8, 8, 8), (16, 100, 50, 64), (100, 4000 // 8, 1000 // 8, 512 // 8),
+        (257, 33, 129, 65), (512, 128, 256, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, Du, Dr, d, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(B + Du), 5)
+        xu = jax.random.normal(ks[0], (1, Du), dtype)
+        xr = jax.random.normal(ks[1], (B, Dr), dtype)
+        wu = jax.random.normal(ks[2], (Du, d), dtype)
+        wr = jax.random.normal(ks[3], (Dr, d), dtype)
+        b = jax.random.normal(ks[4], (d,), dtype)
+        out = mari_matmul_fused(xu, xr, wu, wr, b)
+        ref = mari_matmul_ref(xu, xr, wu, wr, b)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   **_tol(dtype))
+
+    def test_no_bias(self):
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        out = mari_matmul_fused(jax.random.normal(ks[0], (1, 16)),
+                                jax.random.normal(ks[1], (32, 24)),
+                                jax.random.normal(ks[2], (16, 8)),
+                                jax.random.normal(ks[3], (24, 8)))
+        assert out.shape == (32, 8) and np.isfinite(out).all()
+
+
+class TestEmbeddingBag:
+    @pytest.mark.parametrize("V,D,S,nnz", [
+        (16, 8, 4, 20), (100, 32, 17, 123), (1000, 128, 64, 512),
+    ])
+    @pytest.mark.parametrize("combiner", ["sum", "mean"])
+    def test_sweep(self, V, D, S, nnz, combiner):
+        ks = jax.random.split(jax.random.PRNGKey(V + nnz), 3)
+        table = jax.random.normal(ks[0], (V, D))
+        ids = jax.random.randint(ks[1], (nnz,), 0, V)
+        segs = jax.random.randint(ks[2], (nnz,), 0, S)
+        out = embedding_bag(table, ids, segs, num_segments=S, combiner=combiner)
+        ref = embedding_bag_ref(table, ids, segs, S, combiner)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    def test_empty_segments_zero(self):
+        table = jnp.ones((8, 4))
+        ids = jnp.array([0, 1], jnp.int32)
+        segs = jnp.array([2, 2], jnp.int32)   # segments 0,1,3 empty
+        out = embedding_bag(table, ids, segs, num_segments=4)
+        np.testing.assert_array_equal(out[0], 0)
+        np.testing.assert_array_equal(out[1], 0)
+        np.testing.assert_array_equal(out[3], 0)
+        np.testing.assert_array_equal(out[2], 2 * jnp.ones(4))
+
+    def test_unsorted_input(self):
+        ks = jax.random.split(jax.random.PRNGKey(9), 3)
+        table = jax.random.normal(ks[0], (50, 16))
+        ids = jax.random.randint(ks[1], (64,), 0, 50)
+        segs = jax.random.permutation(
+            ks[2], jnp.repeat(jnp.arange(8), 8))
+        out = embedding_bag(table, ids, segs, num_segments=8)
+        ref = embedding_bag_ref(table, ids, segs, 8)
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+class TestDotInteraction:
+    @pytest.mark.parametrize("B,F,D", [(8, 4, 8), (37, 27, 16), (128, 27, 128)])
+    @pytest.mark.parametrize("keep_self", [False, True])
+    def test_sweep(self, B, F, D, keep_self):
+        x = jax.random.normal(jax.random.PRNGKey(B + F), (B, F, D))
+        out = dot_interaction(x, keep_self=keep_self)
+        ref = dot_interaction_ref(x, keep_self=keep_self)
+        assert out.shape[1] == (F * (F + 1) // 2 if keep_self
+                                else F * (F - 1) // 2)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+class TestDinAttention:
+    @pytest.mark.parametrize("B,L,D", [(4, 5, 8), (33, 20, 18), (128, 100, 18)])
+    def test_sweep(self, B, L, D):
+        h1, h2 = 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(B + L), 6)
+        q = jax.random.normal(ks[0], (B, D))
+        keys = jax.random.normal(ks[1], (L, D))
+        mask = jax.random.bernoulli(ks[2], 0.9, (L,)).at[0].set(True)
+        w1 = jax.random.normal(ks[3], (4 * D, h1)) * 0.2
+        w2 = jax.random.normal(ks[4], (h1, h2)) * 0.2
+        w3 = jax.random.normal(ks[5], (h2, 1)) * 0.2
+        b1, b2, b3 = jnp.zeros(h1), jnp.zeros(h2), jnp.zeros(1)
+        out = din_attention(q, keys, mask, w1, b1, w2, b2, w3, b3)
+        ref = din_attention_ref(q, keys, mask, w1, b1, w2, b2, w3, b3)
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_matches_nn_target_attention(self):
+        """Kernel agrees with the graph executor's target_attention op."""
+        from repro.nn.attention import target_attention
+        from repro.nn.layers import dense_apply
+        B, L, D, h1, h2 = 9, 7, 6, 12, 5
+        ks = jax.random.split(jax.random.PRNGKey(3), 6)
+        q = jax.random.normal(ks[0], (B, D))
+        keys = jax.random.normal(ks[1], (1, L, D))
+        mask = jnp.ones((1, L), bool)
+        p = {"layer_0": {"w": jax.random.normal(ks[2], (4 * D, h1)) * 0.3,
+                         "b": jnp.zeros(h1)},
+             "layer_1": {"w": jax.random.normal(ks[3], (h1, h2)) * 0.3,
+                         "b": jnp.zeros(h2)},
+             "layer_2": {"w": jax.random.normal(ks[4], (h2, 1)) * 0.3,
+                         "b": jnp.zeros(1)}}
+
+        def mlp(x):
+            x = jax.nn.relu(dense_apply(p["layer_0"], x))
+            x = jax.nn.relu(dense_apply(p["layer_1"], x))
+            return dense_apply(p["layer_2"], x)
+
+        ref = target_attention(q, keys, mask, mlp)
+        out = din_attention(q, keys[0], mask[0],
+                            p["layer_0"]["w"], p["layer_0"]["b"],
+                            p["layer_1"]["w"], p["layer_1"]["b"],
+                            p["layer_2"]["w"], p["layer_2"]["b"])
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)

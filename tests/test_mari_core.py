@@ -1,0 +1,338 @@
+"""Unit tests for the paper's core: GCA (Alg. 1), MaRI rewrite (Eq. 7),
+parameter conversion, reorganization (§2.4), FLOPs accounting (App. B.2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (Color, apply_mari, convert_params, convert_params_reorg,
+                        detect_in_jaxpr, mari_rewrite, reorganize, run_gca,
+                        WeightPartition)
+from repro.core.mari import (matmul_mari, matmul_mari3, matmul_mari_fragmented,
+                             matmul_vanilla, mari_flops, vanilla_flops)
+from repro.graph import Executor, GraphBuilder, init_graph_params
+from repro.models.ranking import (PaperRankingConfig, build_paper_ranking_model,
+                                  expected_eligible)
+
+
+def _simple_graph():
+    b = GraphBuilder()
+    u = b.input("u", (12,), "user")
+    i = b.input("i", (8,), "item")
+    x = b.input("x", (4,), "cross")
+    c = b.concat("c", [u, i, x])
+    f1 = b.dense("f1", c, 16, activation="relu")
+    f2 = b.dense("f2", f1, 1)
+    b.output(f2)
+    return b.graph
+
+
+class TestGCA:
+    def test_colors(self):
+        g = _simple_graph()
+        r = run_gca(g)
+        assert r.colors["u"] is Color.YELLOW
+        assert r.colors["i"] is Color.BLUE
+        assert r.colors["c"] is Color.BLUE          # blue dominates
+        assert r.colors["f1"] is Color.BLUE
+
+    def test_eligible_first_matmul_only(self):
+        r = run_gca(_simple_graph())
+        assert r.eligible == {"f1": "c"}
+
+    def test_transparent_path(self):
+        b = GraphBuilder()
+        u = b.input("u", (4,), "user")
+        i = b.input("i", (4,), "item")
+        c = b.concat("c", [u, i])
+        idn = b.identity("idn", c)
+        cast = b.cast("cst", idn, "float32")
+        f = b.dense("f", cast, 8)
+        b.output(f)
+        r = run_gca(b.graph)
+        assert "f" in r.eligible
+
+    def test_computational_path_blocks(self):
+        b = GraphBuilder()
+        u = b.input("u", (4,), "user")
+        i = b.input("i", (4,), "item")
+        c = b.concat("c", [u, i])
+        a = b.act("a", c, "relu")           # computational: breaks the path
+        f = b.dense("f", a, 8)
+        b.output(f)
+        r = run_gca(b.graph)
+        assert "f" not in r.eligible
+
+    def test_all_user_concat_not_boundary(self):
+        b = GraphBuilder()
+        u1 = b.input("u1", (4,), "user")
+        u2 = b.input("u2", (4,), "user")
+        c = b.concat("c", [u1, u2])
+        f = b.dense("f", c, 8)
+        b.output(f)
+        r = run_gca(b.graph)
+        assert r.boundary_concats == [] and r.eligible == {}
+
+    def test_paper_model_sites(self):
+        cfg = PaperRankingConfig().scaled(0.05)
+        g, cfg = build_paper_ranking_model(cfg)
+        r = run_gca(g)
+        assert expected_eligible(cfg) <= set(r.eligible)
+
+    def test_user_subgraph_one_shot(self):
+        g = _simple_graph()
+        r = run_gca(g)
+        assert "u" in r.user_subgraph and "f1" not in r.user_subgraph
+
+
+class TestMaRIEquivalence:
+    @pytest.fixture
+    def setup(self):
+        g = _simple_graph()
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        feeds = {
+            "u": jax.random.normal(jax.random.PRNGKey(1), (1, 12)),
+            "i": jax.random.normal(jax.random.PRNGKey(2), (7, 8)),
+            "x": jax.random.normal(jax.random.PRNGKey(3), (7, 4)),
+        }
+        ref = Executor(g, "vani").run(params, feeds)["f2"]
+        return g, params, feeds, ref
+
+    def test_uoi(self, setup):
+        g, params, feeds, ref = setup
+        out = Executor(g, "uoi").run(params, feeds)["f2"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_mari_grouped(self, setup):
+        g, params, feeds, ref = setup
+        mg, mp, conv = apply_mari(g, params)
+        assert [r.dense for r in conv.rewrites] == ["f1"]
+        out = Executor(mg, "uoi").run(mp, feeds)["f2"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_mari_by_domain_three_groups(self, setup):
+        g, params, feeds, ref = setup
+        mg, mp, conv = apply_mari(g, params, group_by_domain=True)
+        labels = [lab for lab, _ in conv.rewrites[0].groups]
+        assert labels == ["user", "item", "cross"]
+        out = Executor(mg, "uoi").run(mp, feeds)["f2"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_mari_fragmented(self, setup):
+        g, params, feeds, ref = setup
+        mg, mp, conv = apply_mari(g, params, fragment=True)
+        out = Executor(mg, "uoi").run(mp, feeds)["f2"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_batch_one(self, setup):
+        g, params, feeds, _ = setup
+        feeds = {k: v[:1] for k, v in feeds.items()}
+        ref = Executor(g, "vani").run(params, feeds)["f2"]
+        mg, mp, _ = apply_mari(g, params)
+        out = Executor(mg, "uoi").run(mp, feeds)["f2"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_dce_removes_dead_concat(self, setup):
+        g, params, _, _ = setup
+        mg, _, _ = apply_mari(g, params)
+        assert "c" not in mg.nodes   # concat consumed only by rewritten dense
+
+
+class TestFunctionalForms:
+    def test_eq7_two_group(self):
+        key = jax.random.PRNGKey(0)
+        xu = jax.random.normal(key, (1, 10))
+        xr = jax.random.normal(key, (32, 6))
+        wu = jax.random.normal(key, (10, 4))
+        wr = jax.random.normal(key, (6, 4))
+        b = jnp.ones((4,))
+        tiled = jnp.concatenate([jnp.broadcast_to(xu, (32, 10)), xr], -1)
+        w = jnp.concatenate([wu, wr], 0)
+        np.testing.assert_allclose(matmul_mari(xu, xr, wu, wr, b),
+                                   matmul_vanilla(tiled, w, b), atol=1e-5)
+
+    def test_eq7_three_group(self):
+        key = jax.random.PRNGKey(1)
+        xu, xi, xc = (jax.random.normal(key, (1, 5)),
+                      jax.random.normal(key, (8, 3)),
+                      jax.random.normal(key, (8, 2)))
+        wu, wi, wc = (jax.random.normal(key, (5, 4)),
+                      jax.random.normal(key, (3, 4)),
+                      jax.random.normal(key, (2, 4)))
+        tiled = jnp.concatenate([jnp.broadcast_to(xu, (8, 5)), xi, xc], -1)
+        w = jnp.concatenate([wu, wi, wc], 0)
+        np.testing.assert_allclose(matmul_mari3(xu, xi, xc, wu, wi, wc),
+                                   matmul_vanilla(tiled, w), atol=1e-5)
+
+    def test_fragmented_equals_grouped(self):
+        key = jax.random.PRNGKey(2)
+        segs = []
+        tiled_parts, w_parts = [], []
+        B = 16
+        for j, (w_, dom) in enumerate([(4, "u"), (3, "i"), (5, "u"), (2, "i")]):
+            x = jax.random.normal(jax.random.fold_in(key, j),
+                                  (1 if dom == "u" else B, w_))
+            wm = jax.random.normal(jax.random.fold_in(key, 10 + j), (w_, 6))
+            segs.append((x, wm))
+            tiled_parts.append(jnp.broadcast_to(x, (B, w_)))
+            w_parts.append(wm)
+        ref = matmul_vanilla(jnp.concatenate(tiled_parts, -1),
+                             jnp.concatenate(w_parts, 0))
+        np.testing.assert_allclose(matmul_mari_fragmented(segs), ref, atol=1e-5)
+
+    def test_flops_eq8_eq9_match_table2(self):
+        # Varying-B regime (D_user=4000, D_item=D_cross=1000): speedup -> 3.0
+        part = WeightPartition(4000, 1000, 1000, 512)
+        assert vanilla_flops(2000, 6000, 512) == part.flops_vanilla(2000)
+        assert mari_flops(2000, 4000, 2000, 512) == part.flops_mari(2000)
+        assert abs(part.flops_speedup(100) - 2.94) < 0.01    # Table 2 row B=100
+        assert abs(part.flops_speedup(2000) - 3.00) < 0.01   # Table 2 row B=2000
+        # Varying D_item/cross regime (D_rest total): 500 -> 8.96, 1000 -> 4.99
+        assert abs(WeightPartition(4000, 500, 0, 512).flops_speedup(2000)
+                   - 8.96) < 0.01
+        assert abs(WeightPartition(4000, 1000, 0, 512).flops_speedup(2000)
+                   - 4.99) < 0.01
+        # saving ratio -> Du/(Du+Di+Dc) for B >> 1 (App. B.2)
+        ratio = 1 - part.flops_mari(100000) / part.flops_vanilla(100000)
+        assert abs(ratio - 4000 / 6000) < 1e-3
+
+
+class TestReorg:
+    def test_interleaved_roundtrip(self):
+        b = GraphBuilder()
+        segs = [("a", 5, "user"), ("b", 3, "item"), ("c", 4, "user"),
+                ("d", 2, "cross"), ("e", 6, "item")]
+        names = [b.input(n, (w,), d) for n, w, d in segs]
+        c = b.concat("cc", names)
+        f = b.dense("f", c, 8)
+        b.output(f)
+        g = b.graph
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        B = 6
+        feeds = {n: jax.random.normal(jax.random.fold_in(jax.random.PRNGKey(1), i),
+                                      ((1 if d == "user" else B), w))
+                 for i, (n, w, d) in enumerate(segs)}
+        ref = Executor(g, "vani").run(params, feeds)["f"]
+        g2, plans = reorganize(g)
+        assert plans and plans[0].new_order == ("a", "c", "b", "e", "d")
+        p2 = convert_params_reorg(plans, params)
+        out = Executor(g2, "uoi").run(p2, feeds)["f"]
+        np.testing.assert_allclose(out, ref, atol=1e-5)
+
+    def test_neat_layout_noop(self):
+        g = _simple_graph()
+        _, plans = reorganize(g)
+        assert plans == []
+
+    def test_restore_node_for_other_consumer(self):
+        b = GraphBuilder()
+        i = b.input("i", (3,), "item")
+        u = b.input("u", (2,), "user")
+        c = b.concat("cc", [i, u])          # item first -> reorg permutes
+        f = b.dense("f", c, 4)
+        a = b.act("other", c, "relu")       # non-matmul consumer
+        b.output(f, a)
+        g = b.graph
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        feeds = {"i": jnp.arange(12.).reshape(4, 3), "u": jnp.ones((1, 2))}
+        ref = Executor(g, "vani").run(params, feeds)
+        g2, plans = reorganize(g)
+        assert plans[0].restored_consumers == ("other",)
+        p2 = convert_params_reorg(plans, params)
+        out = Executor(g2, "uoi").run(p2, feeds)
+        for k in ref:
+            np.testing.assert_allclose(out[k], ref[k], atol=1e-5)
+
+
+class TestJaxprGCA:
+    def test_detects_dot_general(self):
+        def model(params, feeds):
+            z = jnp.concatenate(
+                [jnp.broadcast_to(feeds["user_x"], (feeds["item_x"].shape[0], 4)),
+                 feeds["item_x"]], -1)
+            return jax.nn.relu(z @ params["w"])
+
+        rep = detect_in_jaxpr(
+            model, {"user_x": "user", "item_x": "item"},
+            {"w": jnp.zeros((8, 3))},
+            {"user_x": jnp.zeros((1, 4)), "item_x": jnp.zeros((5, 4))})
+        assert len(rep.mixed_concats) == 1
+        assert len(rep.eligible) == 1
+        assert rep.eligible[0].rhs_shape == (8, 3)
+
+    def test_no_false_positive_after_nonlinearity(self):
+        def model(params, feeds):
+            z = jnp.concatenate(
+                [jnp.broadcast_to(feeds["user_x"], (feeds["item_x"].shape[0], 4)),
+                 feeds["item_x"]], -1)
+            return jax.nn.relu(z) @ params["w"]
+
+        rep = detect_in_jaxpr(
+            model, {"user_x": "user", "item_x": "item"},
+            {"w": jnp.zeros((8, 3))},
+            {"user_x": jnp.zeros((1, 4)), "item_x": jnp.zeros((5, 4))})
+        assert len(rep.eligible) == 0
+
+
+class TestConvertParams:
+    def test_row_partition_matches_eq3(self):
+        g = _simple_graph()
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        conv = mari_rewrite(g)
+        mp = convert_params(conv, params)
+        w = params["f1"]["w"]
+        np.testing.assert_array_equal(mp["f1"]["w_user"], w[:12])
+        np.testing.assert_array_equal(mp["f1"]["w_rest"], w[12:])
+        np.testing.assert_array_equal(mp["f1"]["b"], params["f1"]["b"])
+
+    def test_other_params_shared(self):
+        g = _simple_graph()
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        _, mp, _ = apply_mari(g, params)
+        assert mp["f2"] is params["f2"]
+
+
+class TestAttentionReparam:
+    """Beyond-paper: Eq. 7 pushed through the DIN local-activation unit."""
+
+    def _setup(self):
+        from repro.models.recsys import build_din
+        graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
+                             mlp=(24, 12), item_vocab=128)
+        params = init_graph_params(graph, jax.random.PRNGKey(0))
+        from repro.data.features import make_recsys_feeds
+        feeds = make_recsys_feeds(graph, 11, jax.random.PRNGKey(1))
+        return graph, params, feeds
+
+    def test_lossless(self):
+        graph, params, feeds = self._setup()
+        ref = Executor(graph, "vani").run(params, feeds)["logit"]
+        conv = mari_rewrite(graph, reparam_attention=True)
+        assert [a.node for a in conv.attn_rewrites] == ["din_attn"]
+        mp = convert_params(conv, params)
+        out = Executor(conv.graph, "uoi").run(mp, feeds)["logit"]
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_weight_identity(self):
+        """w_kd = W_k + W_d and w_qd = W_q - W_d recover the original MLP."""
+        graph, params, feeds = self._setup()
+        conv = mari_rewrite(graph, reparam_attention=True)
+        mp = convert_params(conv, params)
+        w1 = params["din_attn"]["layer_0"]["w"]
+        d = conv.attn_rewrites[0].d
+        np.testing.assert_allclose(mp["din_attn"]["layer_0"]["w_kd"],
+                                   w1[:d] + w1[2 * d:3 * d], atol=1e-6)
+        np.testing.assert_allclose(mp["din_attn"]["layer_0"]["w_qd"],
+                                   w1[d:2 * d] - w1[2 * d:3 * d], atol=1e-6)
+        np.testing.assert_allclose(mp["din_attn"]["layer_0"]["w_p"],
+                                   w1[3 * d:], atol=1e-6)
+
+    def test_skipped_when_keys_not_user_side(self):
+        b = GraphBuilder()
+        q = b.input("q", (8,), "item")
+        keys = b.input("keys", (5, 8), "item")   # item-side keys: ineligible
+        att = b.target_attention("att", q, keys)
+        out = b.dense("out", att, 1)
+        b.output(out)
+        conv = mari_rewrite(b.graph, reparam_attention=True)
+        assert conv.attn_rewrites == []

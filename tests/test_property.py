@@ -1,0 +1,136 @@
+"""Hypothesis property tests on the system's invariants.
+
+The central invariant is the paper's losslessness claim: for ANY feature
+layout (widths, domains, order), ANY batch size and ANY eligible-matmul
+topology, VanI == UOI == MaRI(grouped) == MaRI(fragmented) and reorg is a
+pure re-parameterization.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import apply_mari, convert_params_reorg, reorganize, run_gca
+from repro.dist.compress import dequantize_int8, quantize_int8
+from repro.graph import Executor, GraphBuilder, init_graph_params
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+segments = st.lists(
+    st.tuples(st.sampled_from(["user", "item", "cross"]),
+              st.integers(min_value=1, max_value=9)),
+    min_size=2, max_size=6,
+).filter(lambda segs: any(d == "user" for d, _ in segs)
+         and any(d != "user" for d, _ in segs))
+
+
+def _build(segs, units, depth):
+    b = GraphBuilder()
+    names = [b.input(f"s{i}", (w,), d) for i, (d, w) in enumerate(segs)]
+    h = b.concat("c", names)
+    for li in range(depth):
+        h = b.dense(f"fc{li}", h, units, activation="relu")
+    out = b.dense("out", h, 1)
+    b.output(out)
+    return b.graph
+
+
+def _feeds(graph, segs, batch, seed):
+    key = jax.random.PRNGKey(seed)
+    feeds = {}
+    for i, (d, w) in enumerate(segs):
+        key, k = jax.random.split(key)
+        lead = 1 if d == "user" else batch
+        feeds[f"s{i}"] = jax.random.normal(k, (lead, w))
+    return feeds
+
+
+@given(segs=segments, batch=st.integers(1, 33),
+       units=st.sampled_from([4, 16, 40]), seed=st.integers(0, 2**30),
+       fragment=st.booleans(), by_domain=st.booleans())
+@settings(**SETTINGS)
+def test_mari_lossless_any_layout(segs, batch, units, seed, fragment, by_domain):
+    g = _build(segs, units, depth=1)
+    params = init_graph_params(g, jax.random.PRNGKey(seed))
+    feeds = _feeds(g, segs, batch, seed + 1)
+    ref = Executor(g, "vani").run(params, feeds)["out"]
+    uoi = Executor(g, "uoi").run(params, feeds)["out"]
+    mg, mp, conv = apply_mari(g, params, fragment=fragment,
+                              group_by_domain=by_domain)
+    assert conv.rewrites, "fc0 must be eligible by construction"
+    mari = Executor(mg, "uoi").run(mp, feeds)["out"]
+    np.testing.assert_allclose(uoi, ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(mari, ref, rtol=1e-4, atol=1e-4)
+
+
+@given(segs=segments, seed=st.integers(0, 2**30), batch=st.integers(1, 17))
+@settings(**SETTINGS)
+def test_reorg_is_pure_reparameterization(segs, seed, batch):
+    g = _build(segs, 8, depth=1)
+    params = init_graph_params(g, jax.random.PRNGKey(seed))
+    feeds = _feeds(g, segs, batch, seed + 1)
+    ref = Executor(g, "vani").run(params, feeds)["out"]
+    g2, plans = reorganize(g)
+    p2 = convert_params_reorg(plans, params)
+    out = Executor(g2, "uoi").run(p2, feeds)["out"]
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    if plans:
+        # permutation invariants
+        plan = plans[0]
+        assert sorted(plan.perm) == list(range(len(segs)))
+        assert sorted(plan.row_perm.tolist()) == list(range(sum(w for _, w in segs)))
+
+
+@given(segs=segments)
+@settings(**SETTINGS)
+def test_gca_color_invariants(segs):
+    g = _build(segs, 8, depth=2)
+    r = run_gca(g)
+    from repro.core.gca import Color
+    # 1. every node downstream of any blue input is blue
+    # 2. eligible matmuls are exactly the depth-0 dense (depth-1 is behind relu)
+    assert set(r.eligible) == {"fc0"}
+    for name, c in r.colors.items():
+        node = g.nodes[name]
+        if node.op == "input":
+            dom = node.attrs["domain"]
+            assert c is (Color.YELLOW if dom == "user" else Color.BLUE)
+    # 3. outputs are blue (they depend on item features)
+    assert r.colors["out"] is Color.BLUE
+
+
+@given(arr=st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
+                    min_size=1, max_size=64))
+@settings(**SETTINGS)
+def test_int8_quantization_error_bound(arr):
+    x = jnp.asarray(arr, jnp.float32)
+    q, scale = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, scale) - x))
+    # symmetric quantizer: |err| <= scale/2 (+ tiny fp slack)
+    assert err.max() <= float(scale) / 2 + 1e-6
+
+
+@given(seed=st.integers(0, 2**30), batch=st.integers(2, 16))
+@settings(max_examples=10, deadline=None)
+def test_serving_engine_modes_agree(seed, batch):
+    from repro.models.recsys import build_din
+    from repro.serve.engine import ServeRequest, ServingEngine
+    graph, _ = build_din(embed_dim=4, seq_len=6, attn_mlp=(8, 4),
+                         mlp=(8,), item_vocab=32, user_profile_dim=6,
+                         context_dim=3)
+    params = init_graph_params(graph, jax.random.PRNGKey(seed))
+    from repro.data.features import make_recsys_feeds
+    feeds = make_recsys_feeds(graph, batch, jax.random.PRNGKey(seed + 1))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    req = ServeRequest(
+        user_id=0,
+        user_feeds={k: v for k, v in feeds.items() if k in user_in},
+        candidate_feeds={k: v for k, v in feeds.items() if k not in user_in})
+    outs = {}
+    for mode in ("vani", "uoi", "mari"):
+        eng = ServingEngine(graph, params, mode=mode, max_batch=8,
+                            cache_user_reps=False)
+        outs[mode] = eng.score(req).scores
+    np.testing.assert_allclose(outs["uoi"], outs["vani"], rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(outs["mari"], outs["vani"], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,171 @@
+"""End-to-end behaviour tests for the MaRI system.
+
+The paper's deployment claim: train normally, convert with GCA+MaRI, serve —
+with ZERO accuracy change ("training AUC remains unchanged", §3.2) and the
+same scores up to float reassociation.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import apply_mari, run_gca
+from repro.data.features import make_recsys_feeds
+from repro.graph import Executor, init_graph_params
+from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
+from repro.train.losses import auc, bce_with_logits
+from repro.train.optim import adam, apply_updates
+
+
+@pytest.fixture(scope="module")
+def trained_model():
+    """Train the (reduced) paper ranking model for a few hundred steps."""
+    cfg = PaperRankingConfig().scaled(0.02)
+    graph, cfg = build_paper_ranking_model(cfg)
+    ex = Executor(graph, "vani")
+    outputs = list(graph.outputs)
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    opt = adam(2e-3)
+    opt_state = opt.init(params)
+
+    # fixed synthetic "ground truth" teacher so AUC is meaningful
+    teacher = init_graph_params(graph, jax.random.PRNGKey(99))
+
+    def gen_batch(key, B=32):
+        feeds = make_recsys_feeds(graph, B, key, tile_user=True)
+        t_out = ex.run(teacher, feeds)
+        logits = jnp.concatenate([t_out[o] for o in outputs], -1)
+        labels = (logits > jnp.median(logits)).astype(jnp.float32)
+        return feeds, labels
+
+    @jax.jit
+    def step(params, opt_state, feeds, labels):
+        def loss_fn(p):
+            out = ex.run(p, feeds)
+            return bce_with_logits(
+                jnp.concatenate([out[o] for o in outputs], -1), labels)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    key = jax.random.PRNGKey(1)
+    losses = []
+    for _ in range(200):
+        key, k = jax.random.split(key)
+        feeds, labels = gen_batch(k)
+        params, opt_state, loss = step(params, opt_state, feeds, labels)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], "training must improve"
+    return graph, cfg, params, gen_batch, outputs
+
+
+class TestTrainThenConvert:
+    def test_auc_unchanged_after_mari(self, trained_model):
+        graph, cfg, params, gen_batch, outputs = trained_model
+        feeds, labels = gen_batch(jax.random.PRNGKey(777), B=256)
+        base = Executor(graph, "vani").run(params, feeds)
+        base_logits = np.asarray(
+            jnp.concatenate([base[o] for o in outputs], -1))
+        mg, mp, conv = apply_mari(graph, params)
+        assert len(conv.rewrites) >= 5
+        # serving feeds: user at batch 1 (the tiled batch replicated one user)
+        user_in = {n.name for n in graph.input_nodes()
+                   if n.attrs.get("domain") == "user"}
+        sfeeds = {k: (v[:1] if k in user_in else v) for k, v in feeds.items()}
+        out = Executor(mg, "uoi").run(mp, sfeeds)
+        mari_logits = np.asarray(
+            jnp.concatenate([out[o] for o in outputs], -1))
+        np.testing.assert_allclose(mari_logits, base_logits,
+                                   rtol=1e-4, atol=1e-4)
+        a0 = auc(base_logits[:, 0], np.asarray(labels)[:, 0])
+        a1 = auc(mari_logits[:, 0], np.asarray(labels)[:, 0])
+        assert abs(a0 - a1) < 1e-9, "lossless: AUC must be identical"
+
+    def test_every_rewrite_hoists_user_rows(self, trained_model):
+        graph, cfg, params, _, _ = trained_model
+        _, _, conv = apply_mari(graph, params)
+        for r in conv.rewrites:
+            du = sum(w for w, g in zip(r.seg_widths, r.seg_groups)
+                     if g == "user")
+            assert du > 0
+
+    def test_hlo_no_longer_contains_full_matmul(self, trained_model):
+        """VanI's HLO contains the full (B × D_total) fusion matmul; MaRI's
+        must not — the rewrite does what XLA CSE cannot (DESIGN.md §3)."""
+        graph, cfg, params, gen_batch, outputs = trained_model
+        feeds, _ = gen_batch(jax.random.PRNGKey(5), B=64)
+        user_in = {n.name for n in graph.input_nodes()
+                   if n.attrs.get("domain") == "user"}
+        sfeeds = {k: (v[:1] if k in user_in else v) for k, v in feeds.items()}
+
+        gca = run_gca(graph)
+        from repro.graph.ir import infer_shapes
+        shapes = infer_shapes(graph)
+        concat = graph.nodes[gca.eligible["expert0_fc0"]]
+        d_total = shapes["fusion"][-1]
+
+        vani_hlo = jax.jit(Executor(graph, "vani").run).lower(
+            params, feeds).as_text()
+        mg, mp, _ = apply_mari(graph, params)
+        mari_hlo = jax.jit(Executor(mg, "uoi").run).lower(mp, sfeeds).as_text()
+        assert f"64x{d_total}" in vani_hlo.replace(" ", "")
+        assert f"64x{d_total}" not in mari_hlo.replace(" ", "")
+
+
+class TestCheckpointRestart:
+    def test_crash_and_resume(self, tmp_path):
+        from repro.ckpt.manager import CheckpointManager
+        from repro.train.loop import LoopConfig, train_loop
+
+        opt = adam(1e-2)
+        w0 = {"w": jnp.ones((4,))}
+        state0 = {"params": w0, "opt": opt.init(w0)}
+
+        def step(state, batch):
+            def loss_fn(p):
+                return jnp.sum((p["w"] - batch) ** 2)
+            loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+            updates, opt_state = opt.update(grads, state["opt"],
+                                            state["params"])
+            return ({"params": apply_updates(state["params"], updates),
+                     "opt": opt_state}, {"loss": loss})
+
+        def batches():
+            while True:
+                yield jnp.zeros((4,))
+
+        cfgl = LoopConfig(total_steps=40, ckpt_every=10, log_every=100)
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        with pytest.raises(RuntimeError, match="injected failure"):
+            train_loop(step, state0, batches(), mgr, cfgl, fail_at=25,
+                       log=lambda *_: None)
+        assert mgr.latest_step() == 20
+        # restart: resumes at 21 and completes
+        state, _ = train_loop(step, state0, batches(), mgr, cfgl,
+                              log=lambda *_: None)
+        assert mgr.latest_step() == 39
+        assert float(jnp.abs(state["params"]["w"]).max()) < 1.0
+
+
+class TestElastic:
+    def test_remesh_preserves_tp(self):
+        from repro.ft.failures import plan_elastic_remesh
+        plan = plan_elastic_remesh((2, 16, 16), ("pod", "data", "model"), 300)
+        assert plan.new_shape[plan.axes.index("model")] == 16
+        assert int(np.prod(plan.new_shape)) <= 300
+        assert plan.global_batch_scale < 1.0
+
+    def test_remesh_refuses_sub_tp(self):
+        from repro.ft.failures import plan_elastic_remesh
+        with pytest.raises(ValueError):
+            plan_elastic_remesh((16, 16), ("data", "model"), 8)
+
+    def test_heartbeat_detection(self):
+        from repro.ft.failures import HeartbeatMonitor
+        t = [0.0]
+        mon = HeartbeatMonitor(["w0", "w1"], timeout=5.0, clock=lambda: t[0])
+        t[0] = 3.0
+        mon.heartbeat("w0")
+        t[0] = 7.0
+        assert mon.dead() == ["w1"]
+        assert mon.alive() == ["w0"]
