@@ -11,6 +11,7 @@ dimension-homogeneous so scaling preserves them to first order).
 from __future__ import annotations
 
 import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -19,9 +20,14 @@ from repro.common import timeit
 from repro.core.mari import (mari_flops, matmul_mari, matmul_mari_fragmented,
                              matmul_vanilla, vanilla_flops)
 
+_JSON_ROWS: list[dict] = []       # machine-readable mirror of the CSV rows
+_JSON_EXTRA: dict = {}            # structured per-bench payloads (serve)
+
 
 def _row(name: str, us: float, derived: str):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _JSON_ROWS.append({"name": name, "us_per_call": round(us, 1),
+                       "derived": derived})
 
 
 def _mk(key, *shape):
@@ -170,6 +176,59 @@ def bench_table1(iters: int = 30):
 
 
 # ---------------------------------------------------------------------------
+# Two-stage serving: vanilla/uoi/mari latency, cold vs user-cache-hit
+# ---------------------------------------------------------------------------
+
+def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15):
+    """End-to-end ServingEngine latency on paper_ranking at candidate pool B.
+
+    cold = new (user, feature_version) each request (stage 1 must run);
+    hit  = repeat user (stage 1 skipped from the representation cache).
+    Emits CSV rows and a structured payload for --json.
+    """
+    import numpy as np
+    from repro.data.features import make_recsys_feeds
+    from repro.graph.executor import init_graph_params
+    from repro.models.ranking import (PaperRankingConfig,
+                                      build_paper_ranking_model)
+    from repro.serve.engine import ServeRequest, ServingEngine
+
+    graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(scale))
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    feeds = make_recsys_feeds(graph, B, jax.random.PRNGKey(1))
+    ufeeds = {k: v for k, v in feeds.items() if k in user_in}
+    cand = {k: v for k, v in feeds.items() if k not in user_in}
+
+    modes = {}
+    for mode in ("vani", "uoi", "mari"):
+        eng = ServingEngine(graph, params, mode=mode, max_batch=4096)
+        req = lambda uid, ver=0: ServeRequest(
+            user_id=uid, user_feeds=ufeeds, candidate_feeds=cand,
+            feature_version=ver)
+        eng.score(req(-1))                      # compile both stages
+        eng.score(req(0))                       # warm user 0's rep cache
+        cold, hit = [], []
+        for it in range(iters):
+            cold.append(eng.score(req(it + 1, ver=it)).latency_ms)
+            hit.append(eng.score(req(0)).latency_ms)
+        cold_ms = float(np.median(cold))
+        hit_ms = float(np.median(hit))
+        modes[mode] = {
+            "cold_ms": round(cold_ms, 3), "hit_ms": round(hit_ms, 3),
+            "two_stage": eng.two_stage,
+            "stage2_compilations": eng.stage2_compilations,
+        }
+        _row(f"serve/{mode}/cold", cold_ms * 1e3,
+             f"B={B};two_stage={eng.two_stage}")
+        _row(f"serve/{mode}/hit", hit_ms * 1e3,
+             f"B={B};hit_speedup={cold_ms / hit_ms:.2f}x")
+    _JSON_EXTRA["serve"] = {"config": "paper_ranking", "scale": scale,
+                            "B": B, "iters": iters, "modes": modes}
+
+
+# ---------------------------------------------------------------------------
 # Appendix B.1: UOI vs VanI cross-attention (K/V projected once vs B times)
 # ---------------------------------------------------------------------------
 
@@ -200,6 +259,7 @@ BENCHES = {
     "table1": bench_table1,
     "table2": bench_table2,
     "table3": bench_table3,
+    "serve": bench_serve,
     "uoi": bench_uoi_attention,
 }
 
@@ -209,6 +269,13 @@ def main() -> None:
     ap.add_argument("--bench", choices=list(BENCHES) + ["all"], default="all")
     ap.add_argument("--scale", type=float, default=0.25,
                     help="dimension scale for CPU-feasible timings")
+    ap.add_argument("--serve-scale", type=float, default=0.12,
+                    help="paper_ranking scale for the serve bench (kept "
+                         "separate: the serve bench times a full engine, not "
+                         "one matmul)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write machine-readable results (e.g. "
+                         "BENCH_serve.json) for perf-trajectory tracking")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     if args.bench in ("table2", "all"):
@@ -217,8 +284,15 @@ def main() -> None:
         bench_table3(args.scale)
     if args.bench in ("table1", "all"):
         bench_table1()
+    if args.bench in ("serve", "all"):
+        bench_serve(args.serve_scale)
     if args.bench in ("uoi", "all"):
         bench_uoi_attention()
+    if args.json:
+        payload = {"bench": args.bench, "rows": _JSON_ROWS, **_JSON_EXTRA}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {args.json}", flush=True)
 
 
 if __name__ == "__main__":

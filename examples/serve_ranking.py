@@ -1,9 +1,10 @@
 """End-to-end serving driver: the coarse-ranking stage of Fig. 2.
 
 A stream of requests (one user, thousands of candidates each) flows through
-the ServingEngine: user-representation cache, candidate mini-batching with
-padding, MaRI-rewritten graph, hedged-straggler policy. Compares the three
-inference paradigms of Fig. 1 on the same request stream.
+the two-stage ServingEngine: the user-only subgraph runs once per user and
+its outputs are cached (stage 1); candidates are scored by the separately
+compiled batched residual (stage 2) in power-of-two batch buckets. Compares
+the three inference paradigms of Fig. 1 on the same request stream.
 
   PYTHONPATH=src python examples/serve_ranking.py [--candidates 4096]
 """
@@ -25,6 +26,9 @@ def main():
     ap.add_argument("--users", type=int, default=6)
     ap.add_argument("--max-batch", type=int, default=2048)
     ap.add_argument("--scale", type=float, default=0.06)
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route mari_dense through the fused Pallas kernel "
+                         "(interpret mode off-TPU: slow, validation only)")
     args = ap.parse_args()
 
     graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(args.scale))
@@ -47,10 +51,13 @@ def main():
     ref_scores = None
     for mode in ("vani", "uoi", "mari"):
         eng = ServingEngine(graph, params, mode=mode,
-                            max_batch=args.max_batch)
+                            max_batch=args.max_batch,
+                            use_pallas=args.use_pallas)
         if eng.conversion:
             print(f"[{mode}] MaRI rewrote "
                   f"{len(eng.conversion.rewrites)} matmuls")
+        if eng.two_stage:
+            print(f"[{mode}] {eng.split.summary()}")
         lats, hits = [], 0
         last = None
         for req in request_stream(jax.random.PRNGKey(42)):
@@ -64,10 +71,13 @@ def main():
         else:
             err = np.abs(ref_scores - last).max()
             assert err < 1e-3, f"{mode} diverged from VanI by {err}"
+        extra = (f"  stage1_runs={eng.stage1_calls}"
+                 f"  stage2_compiles={eng.stage2_compilations}"
+                 if eng.two_stage else "")
         print(f"[{mode}] avg={lats.mean():7.2f}ms  "
               f"p50={np.percentile(lats, 50):7.2f}ms  "
               f"p99={np.percentile(lats, 99):7.2f}ms  "
-              f"user_cache_hits={hits}/{args.requests}")
+              f"user_cache_hits={hits}/{args.requests}{extra}")
     print("all modes score-identical ✓")
 
 

@@ -10,6 +10,7 @@ from repro.core.mari import (  # noqa: F401
     vanilla_flops,
 )
 from repro.core.mari import apply_mari  # noqa: F401
+from repro.core.split import split_two_stage, TwoStageSplit  # noqa: F401
 from repro.core.partition import WeightPartition  # noqa: F401
 from repro.core.reorg import reorganize, ReorgPlan, convert_params_reorg  # noqa: F401
 from repro.core.jaxpr_gca import detect_in_jaxpr, JaxprGCAReport  # noqa: F401

@@ -45,8 +45,7 @@ def init_graph_params(graph: Graph, key, dtype=jnp.float32) -> dict:
                 "table": normal_init(next(ks), (n.attrs["vocab"], n.attrs["dim"]),
                                      scale, dtype)}
         elif n.op == "target_attention":
-            shapes_local = infer_shapes(graph)
-            d = shapes_local[n.inputs[0]][-1]
+            d = shapes[n.inputs[0]][-1]
             dims = (4 * d,) + tuple(n.attrs["mlp_hidden"]) + (1,)
             p = {}
             for li, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
@@ -86,43 +85,88 @@ def _bcast_batch(xs: list[Array]) -> list[Array]:
     return out
 
 
-def _run_mari_dense(node: Node, params: dict, vals: dict) -> Array:
-    """Eq. 7: Tile(Σ_user x_u W_u, B) + Σ_rest x W  — tile realized as a
-    broadcast add (never materialized)."""
+def _mari_dense_operands(node: Node, params: dict, vals: dict):
+    """Assemble (x, w) pairs + accumulator init + bias for a ``mari_dense``.
+
+    Returns (parts, acc0, bias): ``parts`` is a list of (x, w) whose products
+    sum to the pre-activation output (minus acc0/bias); ``acc0`` is a
+    precomputed (1, units) row (two-stage serving) or None; ``bias`` is the
+    bias vector or None.
+    """
     attrs = node.attrs
     p = params[node.name]
     cast = attrs.get("cast_dtype")
-    acc = None
+
+    def seg(name: str) -> Array:
+        x = vals[name]
+        return x.astype(cast) if cast else x
+
+    parts: list[tuple[Array, Array]] = []
+    acc0 = vals[node.inputs[0]] if attrs.get("precomputed_user") else None
     if attrs.get("fragment", False):
-        # Table-3 regime: one small matmul per original concat segment.
-        for i, seg in enumerate(node.inputs):
-            x = vals[seg]
-            if cast:
-                x = x.astype(cast)
-            y = x @ p[f"w_seg{i}"]
-            acc = y if acc is None else acc + y
+        # Table-3 regime: one small matmul per original concat segment. With
+        # a precomputed partial, inputs[0] is the partial and seg_param_idx
+        # holds the original segment index of each remaining input.
+        if acc0 is not None:
+            idx_names = zip(attrs["seg_param_idx"], node.inputs[1:])
+        else:
+            idx_names = enumerate(node.inputs)
+        for i, name in idx_names:
+            parts.append((seg(name), p[f"w_seg{i}"]))
     else:
+        # "groups" indices already point into node.inputs on both paths (the
+        # split pass remaps them past the partial at position 0).
         for label, seg_idx in attrs["groups"]:
-            xs = [vals[node.inputs[i]] for i in seg_idx]
+            xs = [seg(node.inputs[i]) for i in seg_idx]
             xs = _bcast_batch(xs) if len({x.shape[0] for x in xs}) > 1 else xs
             x = jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
-            if cast:
-                x = x.astype(cast)
-            y = x @ p[f"w_{label}"]
-            acc = y if acc is None else acc + y  # (1,u) + (B,u) broadcasts
-    if attrs.get("use_bias", True):
-        acc = acc + p["b"]
-    return ACTIVATIONS[attrs.get("activation", "identity")](acc)
+            parts.append((x, p[f"w_{label}"]))
+    bias = p["b"] if attrs.get("use_bias", True) else None
+    return parts, acc0, bias
+
+
+def _run_mari_dense(node: Node, params: dict, vals: dict, *,
+                    use_pallas: bool = False, interpret: bool = True) -> Array:
+    """Eq. 7: Tile(Σ_user x_u W_u, B) + Σ_rest x W  — tile realized as a
+    broadcast add (never materialized).
+
+    With ``use_pallas`` the batched side dispatches to the fused Pallas
+    kernel (``kernels.mari_matmul``): user row as accumulator init, bias and
+    activation applied in the kernel epilogue, so the (B, units)
+    pre-activation never round-trips through HBM.
+    """
+    attrs = node.attrs
+    parts, acc0, bias = _mari_dense_operands(node, params, vals)
+    activation = attrs.get("activation", "identity")
+    if use_pallas:
+        from repro.kernels.mari_matmul import mari_matmul_fused_groups
+        return mari_matmul_fused_groups(parts, bias, acc0=acc0,
+                                        activation=activation,
+                                        interpret=interpret)
+    acc = acc0
+    for x, w in parts:
+        y = x @ w
+        acc = y if acc is None else acc + y  # (1,u) + (B,u) broadcasts
+    if bias is not None:
+        acc = acc + bias
+    return ACTIVATIONS[activation](acc)
 
 
 class Executor:
     """Interpret a graph. Construct once, then jit ``run``."""
 
-    def __init__(self, graph: Graph, mode: str = "uoi"):
+    def __init__(self, graph: Graph, mode: str = "uoi", *,
+                 use_pallas: bool = False, pallas_interpret: bool | None = None):
         if mode not in ("vani", "uoi"):
             raise ValueError(f"mode must be 'vani' or 'uoi', got {mode!r}")
         self.graph = graph
         self.mode = mode
+        # Backend-gated Pallas dispatch for mari_dense: compiled on TPU,
+        # interpret mode everywhere else (CPU validation).
+        self.use_pallas = use_pallas
+        if pallas_interpret is None:
+            pallas_interpret = jax.default_backend() != "tpu"
+        self.pallas_interpret = pallas_interpret
         self._user_inputs = {
             n.name for n in graph.input_nodes() if n.attrs.get("domain") == "user"
         }
@@ -155,7 +199,41 @@ class Executor:
                 y = y + p["b"]
             return ACTIVATIONS[n.attrs.get("activation", "identity")](y)
         if op == "mari_dense":
-            return _run_mari_dense(n, params, vals)
+            # The Pallas path requires a clean f32 pipeline; mixed-precision
+            # (cast_dtype) nodes keep the jnp path.
+            use_pallas = self.use_pallas and not n.attrs.get("cast_dtype")
+            return _run_mari_dense(n, params, vals, use_pallas=use_pallas,
+                                   interpret=self.pallas_interpret)
+        if op == "mari_user_partial":
+            # Stage-1 half of a split mari_dense: Σ_user x_u W_u (+ b), a
+            # (1, units) row the batched stage consumes as accumulator init.
+            p = params[n.attrs["param_of"]]
+            cast = n.attrs.get("cast_dtype")
+            if n.attrs.get("fragment"):
+                acc = None
+                for i, name in zip(n.attrs["seg_idx"], n.inputs):
+                    x = vals[name]
+                    if cast:
+                        x = x.astype(cast)
+                    y = x @ p[f"w_seg{i}"]
+                    acc = y if acc is None else acc + y
+            else:
+                xs = [vals[i] for i in n.inputs]
+                x = jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
+                if cast:
+                    x = x.astype(cast)
+                acc = x @ p["w_user"]
+            if n.attrs.get("use_bias", True) and "b" in p:
+                acc = acc + p["b"]
+            return acc
+        if op == "attn_user_part":
+            # One-shot k @ w_kd (+ b) of a decomposed target_attention.
+            l0 = params[n.attrs["param_of"]]["layer_0"]
+            return (ins[0][0] @ l0["w_kd"] + l0["b"])[None]
+        if op == "attn_user_T":
+            # One-shot T[l,d,h] = k[l,d] * w_p[d,h].
+            l0 = params[n.attrs["param_of"]]["layer_0"]
+            return (ins[0][0][:, :, None] * l0["w_p"][None])[None]
         if op == "embedding":
             rows = jnp.take(params[n.name]["table"], ins[0], axis=0)
             pool = n.attrs.get("pool")
@@ -191,12 +269,17 @@ class Executor:
                 # keys are (1, L, D) one-shot; (B, L, 4D) never materializes.
                 l0 = p["layer_0"]
                 k1 = keys[0]                                    # (L, D)
-                u_part = k1 @ l0["w_kd"]                        # (L, h) once
+                if n.attrs.get("precomputed"):
+                    # Two-stage serving: one-shot tensors arrive from stage 1
+                    # (core.split) — bias is folded into u_part there.
+                    u_part = ins[-2][0]                         # (L, h)
+                    t = ins[-1][0]                              # (L, D, h)
+                else:
+                    u_part = k1 @ l0["w_kd"] + l0["b"]          # (L, h) once
+                    t = k1[:, :, None] * l0["w_p"][None]        # (L, D, h) once
                 q_part = q @ l0["w_qd"]                         # (B, h)
-                t = k1[:, :, None] * l0["w_p"][None]            # (L, D, h) once
                 p_part = jnp.einsum("bd,ldh->blh", q, t)        # (B, L, h)
-                h = jax.nn.relu(u_part[None] + q_part[:, None, :]
-                                + p_part + l0["b"])
+                h = jax.nn.relu(u_part[None] + q_part[:, None, :] + p_part)
                 for li in range(1, nlayers):
                     h = dense_apply(p[f"layer_{li}"], h)
                     if li < nlayers - 1:

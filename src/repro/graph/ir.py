@@ -230,6 +230,12 @@ def infer_shapes(graph: Graph) -> dict[str, tuple[int, ...]]:
             s = ins[0]
         elif n.op == "target_attention":
             s = ins[0]  # (D,) pooled interest, same shape as query
+        elif n.op == "mari_user_partial":
+            s = (n.attrs["units"],)
+        elif n.op == "attn_user_part":
+            s = (ins[0][0], n.attrs["h1"])
+        elif n.op == "attn_user_T":
+            s = (ins[0][0], ins[0][1], n.attrs["h1"])
         elif n.op == "reshape":
             s = tuple(n.attrs["shape"])
         elif n.op == "reduce":

@@ -5,7 +5,10 @@ VMEM tiling), ``ops.py`` (jit'd public wrapper, padding/fallback logic) and
 ``ref.py`` (pure-jnp oracle used by the allclose test sweeps). Kernels are
 validated on CPU with ``interpret=True``; TPU is the compile target.
 """
-from repro.kernels.mari_matmul.ops import mari_matmul_fused  # noqa: F401
+from repro.kernels.mari_matmul.ops import (  # noqa: F401
+    mari_matmul_fused,
+    mari_matmul_fused_groups,
+)
 from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401
 from repro.kernels.dot_interaction.ops import dot_interaction  # noqa: F401
 from repro.kernels.din_attention.ops import din_attention  # noqa: F401

@@ -1,1 +1,4 @@
-from repro.kernels.mari_matmul.ops import mari_matmul_fused  # noqa: F401
+from repro.kernels.mari_matmul.ops import (  # noqa: F401
+    mari_matmul_fused,
+    mari_matmul_fused_groups,
+)

@@ -7,6 +7,10 @@ initializes from the broadcast ``u`` tile instead of zeros, and the MXU only
 streams the item/cross operand ``x_rest @ w_rest``. ``Tile(u, B)`` never
 exists in HBM, and the epilogue add is fused into the matmul.
 
+The epilogue additionally applies the layer's activation in-register
+(``activation``), so the (B, d) pre-activation never round-trips through
+HBM between the matmul and the nonlinearity.
+
 Grid: (B/bm, d/bn, Dr/bk), k innermost; accumulator in f32 VMEM scratch.
 Block shapes are (8,128)-aligned for the MXU systolic array.
 """
@@ -19,8 +23,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# Epilogue activations computed on the f32 accumulator tile. Kept in sync
+# with repro.nn.layers.ACTIVATIONS (not imported to keep the kernel module
+# dependency-free).
+_EPILOGUES = {
+    "identity": lambda x: x,
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+}
 
-def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref):
+
+def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref, *, activation):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         # Eq. 7's Tile(x_u W_u, B): broadcast the user row into the tile.
@@ -32,21 +48,24 @@ def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref):
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _done():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        o_ref[...] = _EPILOGUES[activation](acc_ref[...]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "activation", "interpret"))
 def mari_matmul_kernel(x_rest, w_rest, u_row, *, bm=128, bn=128, bk=512,
-                       interpret=False):
-    """x_rest (B, Dr) @ w_rest (Dr, d) + broadcast u_row (1, d).
+                       activation="identity", interpret=False):
+    """act(x_rest (B, Dr) @ w_rest (Dr, d) + broadcast u_row (1, d)).
 
     Caller guarantees B % bm == 0, d % bn == 0, Dr % bk == 0 (ops.py pads).
     """
     B, Dr = x_rest.shape
     d = w_rest.shape[1]
     assert B % bm == 0 and d % bn == 0 and Dr % bk == 0, (B, Dr, d, bm, bn, bk)
+    if activation not in _EPILOGUES:
+        raise ValueError(f"unsupported epilogue activation {activation!r}")
     return pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, activation=activation),
         grid=(B // bm, d // bn, Dr // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x tile

@@ -1,6 +1,16 @@
-"""Public fused-MaRI matmul op: pads to MXU-aligned tiles, computes the tiny
-user-side product with jnp (2·Du·d FLOPs), and dispatches the Pallas kernel
-for the batched side with the user row fused as accumulator init."""
+"""Public fused-MaRI matmul ops: pad to MXU-aligned tiles, compute the tiny
+user-side products with jnp (2·Du·d FLOPs), and dispatch the Pallas kernel
+for the batched side with the user row fused as accumulator init and the
+bias + activation applied in the kernel epilogue.
+
+``mari_matmul_fused``        — Eq. 7 two-group form (user, rest).
+``mari_matmul_fused_groups`` — multi-group / fragmented form: any number of
+    (x, w) products summed into one output. Batch-1 operands (user side,
+    Σ 2·Du·d FLOPs) fold into the accumulator-init row; batch-B operands
+    concatenate into a single MXU stream (Σ_g x_g @ w_g == concat(x_g) @
+    stack(w_g), the block-matmul identity of Eq. 2), so a §2.4-fragmented
+    layout costs one kernel launch, not one per fragment.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import round_up
-from repro.kernels.mari_matmul.kernel import mari_matmul_kernel
+from repro.kernels.mari_matmul.kernel import _EPILOGUES, mari_matmul_kernel
 
 _VMEM_BUDGET = 8 * 1024 * 1024  # bytes; conservative half of v5e VMEM
 
@@ -23,26 +33,58 @@ def _pick_blocks(B: int, Dr: int, d: int, itemsize: int) -> tuple[int, int, int]
     return bm, bn, bk
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def mari_matmul_fused(x_user, x_rest, w_user, w_rest, b=None, *,
-                      interpret=True):
-    """Eq. 7: Tile(x_user @ w_user, B) + x_rest @ w_rest (+ b).
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
+                             activation="identity", interpret=True):
+    """act(Σ_g Tile-or-stream(x_g @ w_g) + acc0 + b) for (x, w) pairs.
 
-    x_user (1, Du), x_rest (B, Dr), w_user (Du, d), w_rest (Dr, d).
-    interpret=True on CPU (validation); False on real TPU.
+    Each x is (1, D_g) (user side — folded into the broadcast row) or
+    (B, D_g) (batched side — streamed through the MXU). ``acc0`` is an
+    optional precomputed (1, d) row (two-stage serving partial) added to the
+    accumulator init. interpret=True on CPU (validation); False on TPU.
     """
-    B, Dr = x_rest.shape
-    d = w_rest.shape[1]
+    d = parts[0][1].shape[1]
+    user = [(x, w) for x, w in parts if x.shape[0] == 1]
+    rest = [(x, w) for x, w in parts if x.shape[0] != 1]
+
     # user row computed and kept in f32 — it seeds the f32 accumulator, so
     # rounding it to bf16 here would inject avoidable error (ulp(|u|)).
-    u = x_user.astype(jnp.float32) @ w_user.astype(jnp.float32)
+    u = jnp.zeros((1, d), jnp.float32)
+    for x, w in user:
+        u = u + x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if acc0 is not None:
+        u = u + acc0.astype(jnp.float32)
     if b is not None:
         u = u + b.astype(jnp.float32)
+
+    if not rest:  # B == 1: everything is one-shot, no batched stream left
+        out = _EPILOGUES[activation](u)
+        return out.astype(parts[0][0].dtype)
+
+    B = max(x.shape[0] for x, _ in rest)
+    x_rest = jnp.concatenate(
+        [jnp.broadcast_to(x, (B,) + x.shape[1:]) for x, _ in rest], axis=-1)
+    w_rest = jnp.concatenate([w for _, w in rest], axis=0)
+
+    Dr = x_rest.shape[1]
     bm, bn, bk = _pick_blocks(B, Dr, d, x_rest.dtype.itemsize)
     Bp, Drp, dp = round_up(B, bm), round_up(Dr, bk), round_up(d, bn)
     xp = jnp.pad(x_rest, ((0, Bp - B), (0, Drp - Dr)))
     wp = jnp.pad(w_rest, ((0, Drp - Dr), (0, dp - d)))
     up = jnp.pad(u, ((0, 0), (0, dp - d)))
     out = mari_matmul_kernel(xp, wp, up, bm=bm, bn=bn, bk=bk,
-                             interpret=interpret)
+                             activation=activation, interpret=interpret)
     return out[:B, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def mari_matmul_fused(x_user, x_rest, w_user, w_rest, b=None, *,
+                      activation="identity", interpret=True):
+    """act(Tile(x_user @ w_user, B) + x_rest @ w_rest (+ b)) — Eq. 7.
+
+    x_user (1, Du), x_rest (B, Dr), w_user (Du, d), w_rest (Dr, d).
+    interpret=True on CPU (validation); False on real TPU.
+    """
+    return mari_matmul_fused_groups(
+        [(x_user, w_user), (x_rest, w_rest)], b,
+        activation=activation, interpret=interpret)

@@ -1,7 +1,9 @@
-"""Pure-jnp oracle for the fused MaRI matmul (Eq. 7, two-group form)."""
+"""Pure-jnp oracles for the fused MaRI matmul (Eq. 7)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from repro.nn.layers import ACTIVATIONS
 
 
 def mari_matmul_ref(x_user, x_rest, w_user, w_rest, b=None):
@@ -11,3 +13,16 @@ def mari_matmul_ref(x_user, x_rest, w_user, w_rest, b=None):
     if b is not None:
         y = y + b.astype(jnp.float32)
     return y.astype(x_rest.dtype)
+
+
+def mari_matmul_groups_ref(parts, b=None, *, acc0=None, activation="identity"):
+    """Oracle for ``mari_matmul_fused_groups``: act(Σ x_g W_g + acc0 + b)."""
+    B = max(x.shape[0] for x, _ in parts)
+    y = jnp.zeros((B, parts[0][1].shape[1]), jnp.float32)
+    for x, w in parts:
+        y = y + x.astype(jnp.float32) @ w.astype(jnp.float32)
+    if acc0 is not None:
+        y = y + acc0.astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return ACTIVATIONS[activation](y).astype(parts[0][0].dtype)

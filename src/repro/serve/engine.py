@@ -1,14 +1,25 @@
 """Serving runtime for ranking graphs.
 
-Implements the inference workflow of Fig. 2: a request arrives with one
-user's features and a candidate item set; the engine
-  (1) optionally reuses a cached user-side representation (the one-shot
-      user computation is content-addressed by user id + feature version),
-  (2) splits oversized candidate pools into fixed-size mini-batches
-      (padding the tail) so every call hits a pre-compiled executable,
-  (3) scores under VanI / UOI / MaRI — MaRI engines hold the rewritten
-      graph + re-parameterized weights from ``repro.core.mari``,
-  (4) hedges straggling mini-batches per repro.ft.HedgePolicy.
+Implements the inference workflow of Fig. 2 as a two-stage compiled
+pipeline; a request arrives with one user's features and a candidate set:
+
+  (1) **stage 1 (user-side partial evaluation)** — the user-only precompute
+      subgraph (``repro.core.split``) runs at batch 1 and produces the user
+      activations, the per-``mari_dense`` partials ``x_user @ w_user`` and
+      the decomposed-attention one-shot tensors. Its outputs are cached per
+      ``(user_id, feature_version)``: a repeat user skips the user tower
+      entirely — no user-only node is re-executed.
+  (2) **stage 2 (batched residual)** — the candidate-side subgraph, jitted
+      separately, consumes the cached stage-1 outputs as batch-1 inputs.
+      Candidate pools are split into power-of-two *batch buckets* (tail
+      padded up), so every pool size hits one of at most
+      log2(max_batch / min_bucket) + 1 pre-compiled executables instead of
+      recompiling per distinct size.
+  (3) modes: VanI / UOI / MaRI — MaRI engines hold the rewritten graph +
+      re-parameterized weights from ``repro.core.mari``; ``use_pallas``
+      routes each ``mari_dense`` through the fused Pallas kernel
+      (interpret mode off-TPU).
+  (4) straggling mini-batches are hedged per repro.ft.HedgePolicy.
 """
 from __future__ import annotations
 
@@ -21,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.mari import mari_rewrite, convert_params
+from repro.core.split import split_two_stage
 from repro.ft.failures import HedgePolicy
 from repro.graph.executor import Executor
 from repro.graph.ir import Graph
@@ -31,6 +43,7 @@ class ServeRequest:
     user_id: int
     user_feeds: Mapping[str, jax.Array]      # leading dim 1
     candidate_feeds: Mapping[str, jax.Array]  # leading dim = n_candidates
+    feature_version: int = 0                 # bump to invalidate cached reps
 
 
 @dataclasses.dataclass
@@ -40,17 +53,28 @@ class ServeResult:
     n_batches: int
     user_cache_hit: bool
     hedged: int = 0
+    stage1_ms: float = 0.0                   # 0 when cached / single-stage
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 class ServingEngine:
     def __init__(self, graph: Graph, params: dict, *, mode: str = "mari",
-                 max_batch: int = 4096, cache_user_reps: bool = True):
+                 max_batch: int = 4096, cache_user_reps: bool = True,
+                 two_stage: bool | None = None, min_bucket: int = 128,
+                 use_pallas: bool = False, reparam_attention: bool = False):
         if mode not in ("vani", "uoi", "mari"):
             raise ValueError(mode)
         self.mode = mode
         self.max_batch = max_batch
+        self.min_bucket = min(min_bucket, max_batch)
         if mode == "mari":
-            conv = mari_rewrite(graph)
+            conv = mari_rewrite(graph, reparam_attention=reparam_attention)
             self.graph = conv.graph
             self.params = convert_params(conv, params)
             self.conversion = conv
@@ -60,45 +84,126 @@ class ServingEngine:
             self.params = params
             self.conversion = None
             exec_mode = mode
-        self._ex = Executor(self.graph, exec_mode)
-        self._step = jax.jit(self._ex.run)
+        # vani tiles user feeds into the batch — there is no user-only
+        # subgraph to peel, so it stays single-stage.
+        self.two_stage = (exec_mode == "uoi") if two_stage is None else two_stage
         self.outputs = list(self.graph.outputs)
         self._user_inputs = [n.name for n in self.graph.input_nodes()
                              if n.attrs.get("domain") == "user"]
-        self._user_cache: dict[int, Mapping[str, jax.Array]] = {}
+        if self.two_stage:
+            split = split_two_stage(self.graph)
+            # The request contract partitions feeds by domain: user_feeds
+            # carries exactly the domain=="user" inputs. A stage-1 input
+            # outside that set (an uncolored, domain-less input pulled into
+            # the user closure) could never be fed, so the split is not
+            # servable for this graph.
+            unservable = [n.name for n in split.stage1.input_nodes()
+                          if n.attrs.get("domain") != "user"]
+            if unservable and two_stage:
+                raise ValueError(
+                    f"two_stage=True but stage-1 needs non-user feeds "
+                    f"{unservable}; give these inputs domain='user' or "
+                    f"serve single-stage")
+            if unservable:
+                self.two_stage = False
+        if self.two_stage:
+            self.split = split
+            self._stage1 = jax.jit(
+                Executor(self.split.stage1, "uoi").run)
+            self._stage2 = jax.jit(
+                Executor(self.split.stage2, "uoi", use_pallas=use_pallas).run)
+            self._stage1_inputs = {
+                n.name for n in self.split.stage1.input_nodes()}
+            self._step = None
+        else:
+            self.split = None
+            self._stage1 = self._stage2 = None
+            ex = Executor(self.graph, exec_mode, use_pallas=use_pallas)
+            self._step = jax.jit(ex.run)
+        self.stage1_calls = 0                 # trace counter for the split test
+        self._batch_shapes: set[int] = set()  # distinct bucketed chunk sizes
+        self._user_cache: dict[tuple[int, int], Mapping[str, jax.Array]] = {}
         self.cache_user_reps = cache_user_reps
         self.hedge = HedgePolicy()
 
     # -- candidate mini-batching --------------------------------------------
-    def _split(self, feeds: Mapping[str, jax.Array]) -> list[dict]:
+    def _bucket(self, n: int) -> int:
+        """Smallest power-of-two bucket >= n, clamped to
+        [min_bucket, max_batch] — every pool size maps onto a small, fixed
+        set of compiled shapes."""
+        return min(self.max_batch, _next_pow2(max(n, self.min_bucket)))
+
+    def _split(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
         n = next(iter(feeds.values())).shape[0]
         out = []
         for lo in range(0, n, self.max_batch):
             hi = min(lo + self.max_batch, n)
             chunk = {k: v[lo:hi] for k, v in feeds.items()}
-            if hi - lo < self.max_batch and n > self.max_batch:
-                pad = self.max_batch - (hi - lo)
+            bucket = self._bucket(hi - lo)
+            if hi - lo < bucket:
+                pad = bucket - (hi - lo)
                 chunk = {k: jnp.concatenate(
                     [v, jnp.broadcast_to(v[-1:], (pad,) + v.shape[1:])])
                     for k, v in chunk.items()}
+            self._batch_shapes.add(bucket)
             out.append((chunk, hi - lo))
         return out
 
+    @property
+    def stage2_compilations(self) -> int:
+        """Number of compiled batched-stage executables (distinct buckets)."""
+        fn = self._stage2 if self.two_stage else self._step
+        try:
+            return fn._cache_size()
+        except AttributeError:  # older/newer jax: fall back to shape count
+            return len(self._batch_shapes)
+
+    def _cache_put(self, key: tuple[int, int], reps: Mapping) -> None:
+        """One live entry per user: a new feature_version supersedes (and
+        frees) older versions."""
+        for stale in [k for k in self._user_cache
+                      if k[0] == key[0] and k != key]:
+            del self._user_cache[stale]
+        self._user_cache[key] = reps
+
+    # -- stage 1: user-side partial evaluation ------------------------------
+    def _user_reps(self, req: ServeRequest) -> tuple[Mapping, bool, float]:
+        key = (req.user_id, req.feature_version)
+        if self.cache_user_reps and key in self._user_cache:
+            return self._user_cache[key], True, 0.0
+        t0 = time.perf_counter()
+        feeds = {k: v for k, v in req.user_feeds.items()
+                 if k in self._stage1_inputs}
+        reps = self._stage1(self.params, feeds)
+        jax.block_until_ready(reps)
+        self.stage1_calls += 1
+        ms = (time.perf_counter() - t0) * 1e3
+        if self.cache_user_reps:
+            self._cache_put(key, reps)
+        return reps, False, ms
+
     def score(self, req: ServeRequest) -> ServeResult:
         t0 = time.perf_counter()
-        cache_hit = False
-        user_feeds = dict(req.user_feeds)
-        if self.cache_user_reps and req.user_id in self._user_cache:
-            user_feeds = self._user_cache[req.user_id]
-            cache_hit = True
-        elif self.cache_user_reps:
-            self._user_cache[req.user_id] = user_feeds
+        stage1_ms = 0.0
+        if self.two_stage:
+            base_feeds, cache_hit, stage1_ms = self._user_reps(req)
+            step = self._stage2
+        else:
+            cache_hit = False
+            base_feeds = dict(req.user_feeds)
+            key = (req.user_id, req.feature_version)
+            if self.cache_user_reps and key in self._user_cache:
+                base_feeds = self._user_cache[key]
+                cache_hit = True
+            elif self.cache_user_reps:
+                self._cache_put(key, base_feeds)
+            step = self._step
 
         chunks = self._split(req.candidate_feeds)
         scores, hedged = [], 0
         for chunk, valid in chunks:
             tb = time.perf_counter()
-            out = self._step(self.params, {**user_feeds, **chunk})
+            out = step(self.params, {**base_feeds, **chunk})
             s = np.asarray(jnp.concatenate(
                 [out[o] for o in self.outputs], axis=-1))[:valid]
             lat_ms = (time.perf_counter() - tb) * 1e3
@@ -109,7 +214,9 @@ class ServingEngine:
         return ServeResult(
             scores=np.concatenate(scores, axis=0),
             latency_ms=(time.perf_counter() - t0) * 1e3,
-            n_batches=len(chunks), user_cache_hit=cache_hit, hedged=hedged)
+            n_batches=len(chunks), user_cache_hit=cache_hit, hedged=hedged,
+            stage1_ms=stage1_ms)
 
     def invalidate_user(self, user_id: int) -> None:
-        self._user_cache.pop(user_id, None)
+        for key in [k for k in self._user_cache if k[0] == user_id]:
+            self._user_cache.pop(key, None)

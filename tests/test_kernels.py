@@ -8,11 +8,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import (din_attention, dot_interaction, embedding_bag,
-                           mari_matmul_fused)
+                           mari_matmul_fused, mari_matmul_fused_groups)
 from repro.kernels.din_attention.ref import din_attention_ref
 from repro.kernels.dot_interaction.ref import dot_interaction_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
-from repro.kernels.mari_matmul.ref import mari_matmul_ref
+from repro.kernels.mari_matmul.ref import (mari_matmul_groups_ref,
+                                           mari_matmul_ref)
 
 
 def _tol(dtype):
@@ -46,6 +47,114 @@ class TestMariMatmul:
                                 jax.random.normal(ks[2], (16, 8)),
                                 jax.random.normal(ks[3], (24, 8)))
         assert out.shape == (32, 8) and np.isfinite(out).all()
+
+    @pytest.mark.parametrize("activation", ["relu", "sigmoid", "gelu", "tanh"])
+    @pytest.mark.parametrize("B,Du,Dr,d", [(64, 48, 96, 32), (257, 33, 129, 65)])
+    def test_activation_epilogue(self, activation, B, Du, Dr, d):
+        """Bias + activation fused into the kernel epilogue (non-aligned
+        shapes included) match the jnp oracle."""
+        ks = jax.random.split(jax.random.PRNGKey(d), 5)
+        xu = jax.random.normal(ks[0], (1, Du))
+        xr = jax.random.normal(ks[1], (B, Dr))
+        wu = jax.random.normal(ks[2], (Du, d))
+        wr = jax.random.normal(ks[3], (Dr, d))
+        b = jax.random.normal(ks[4], (d,))
+        out = mari_matmul_fused(xu, xr, wu, wr, b, activation=activation)
+        ref = mari_matmul_groups_ref([(xu, wu), (xr, wr)], b,
+                                     activation=activation)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+class TestMariMatmulGroups:
+    """Multi-group / fragmented variant: Σ_g x_g W_g with batch-1 (user)
+    operands folded into the accumulator-init row."""
+
+    def _parts(self, key, layout, B, d):
+        parts = []
+        for j, (dom, w_) in enumerate(layout):
+            x = jax.random.normal(jax.random.fold_in(key, j),
+                                  (1 if dom == "u" else B, w_))
+            w = jax.random.normal(jax.random.fold_in(key, 100 + j), (w_, d))
+            parts.append((x, w))
+        return parts
+
+    @pytest.mark.parametrize("activation", ["identity", "relu", "sigmoid"])
+    def test_fragmented_interleaved(self, activation):
+        B, d = 53, 17   # deliberately non-aligned
+        layout = [("u", 5), ("i", 9), ("u", 13), ("i", 3), ("u", 4)]
+        parts = self._parts(jax.random.PRNGKey(1), layout, B, d)
+        b = jax.random.normal(jax.random.PRNGKey(2), (d,))
+        out = mari_matmul_fused_groups(parts, b, activation=activation)
+        ref = mari_matmul_groups_ref(parts, b, activation=activation)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    def test_matches_vanilla_tiled(self):
+        """Groups form == vanilla (B, D) @ (D, d) over tiled features."""
+        from repro.core.mari import matmul_vanilla
+        B, d = 31, 8
+        layout = [("u", 6), ("i", 4), ("u", 5)]
+        parts = self._parts(jax.random.PRNGKey(3), layout, B, d)
+        tiled = jnp.concatenate(
+            [jnp.broadcast_to(x, (B,) + x.shape[1:]) for x, _ in parts], -1)
+        w = jnp.concatenate([w for _, w in parts], 0)
+        out = mari_matmul_fused_groups(parts)
+        np.testing.assert_allclose(out, matmul_vanilla(tiled, w),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_acc0_row(self):
+        """Precomputed (1, d) partial (two-stage serving) seeds the
+        accumulator."""
+        B, d = 16, 8
+        parts = self._parts(jax.random.PRNGKey(4), [("i", 7)], B, d)
+        acc0 = jax.random.normal(jax.random.PRNGKey(5), (1, d))
+        out = mari_matmul_fused_groups(parts, acc0=acc0, activation="relu")
+        ref = mari_matmul_groups_ref(parts, acc0=acc0, activation="relu")
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+    def test_batch_one_all_user(self):
+        parts = self._parts(jax.random.PRNGKey(6), [("u", 5), ("u", 3)], 1, 4)
+        out = mari_matmul_fused_groups(parts)
+        ref = mari_matmul_groups_ref(parts)
+        assert out.shape == (1, 4)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-4)
+
+
+class TestExecutorPallasPath:
+    """kernel == _run_mari_dense (jnp) == vanilla dense graph, with bias,
+    activation, and non-aligned shapes."""
+
+    def _graph(self, activation="relu", use_bias=True):
+        from repro.graph.ir import GraphBuilder
+        b = GraphBuilder()
+        u = b.input("u", (19,), "user")
+        i = b.input("i", (11,), "item")
+        x = b.input("x", (6,), "cross")
+        c = b.concat("c", [u, i, x])
+        f1 = b.dense("f1", c, 21, activation=activation, use_bias=use_bias)
+        f2 = b.dense("f2", f1, 1)
+        b.output(f2)
+        return b.graph
+
+    @pytest.mark.parametrize("activation", ["relu", "sigmoid"])
+    @pytest.mark.parametrize("use_bias", [True, False])
+    @pytest.mark.parametrize("fragment", [False, True])
+    def test_three_way_equivalence(self, activation, use_bias, fragment):
+        from repro.core import apply_mari
+        from repro.graph.executor import Executor, init_graph_params
+        g = self._graph(activation, use_bias)
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        feeds = {
+            "u": jax.random.normal(jax.random.PRNGKey(1), (1, 19)),
+            "i": jax.random.normal(jax.random.PRNGKey(2), (13, 11)),
+            "x": jax.random.normal(jax.random.PRNGKey(3), (13, 6)),
+        }
+        ref = Executor(g, "vani").run(params, feeds)["f2"]   # vanilla dense
+        mg, mp, _ = apply_mari(g, params, fragment=fragment)
+        out_jnp = Executor(mg, "uoi").run(mp, feeds)["f2"]
+        out_pal = Executor(mg, "uoi", use_pallas=True).run(mp, feeds)["f2"]
+        np.testing.assert_allclose(out_jnp, ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out_pal, ref, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(out_pal, out_jnp, rtol=1e-4, atol=1e-4)
 
 
 class TestEmbeddingBag:

@@ -1,0 +1,246 @@
+"""Two-stage serving pipeline: graph bipartition (core.split), user-rep
+caching, bucketed batch compilation, and Pallas-backed mari_dense — the
+inference workflow of Fig. 2 end-to-end.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import apply_mari, split_two_stage
+from repro.core.mari import convert_params, mari_rewrite
+from repro.data.features import make_recsys_feeds
+from repro.graph.executor import Executor, init_graph_params
+from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
+from repro.models.recsys import build_din
+from repro.serve.engine import ServeRequest, ServingEngine
+
+
+def _paper_setup(scale=0.05, batch=23):
+    graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(scale))
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    feeds = make_recsys_feeds(graph, batch, jax.random.PRNGKey(1))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    return graph, params, feeds, user_in
+
+
+def _request(feeds, user_in, user_id=0, version=0):
+    return ServeRequest(
+        user_id=user_id,
+        user_feeds={k: v for k, v in feeds.items() if k in user_in},
+        candidate_feeds={k: v for k, v in feeds.items() if k not in user_in},
+        feature_version=version)
+
+
+class TestSplitStructure:
+    def test_stage1_is_user_only(self):
+        graph, params, _, _ = _paper_setup()
+        mg, _, _ = apply_mari(graph, params)
+        split = split_two_stage(mg)
+        # every stage-1 node is user-side (or a partial of a rewritten unit)
+        for n in split.stage1.nodes.values():
+            assert (n.name in split.user_nodes
+                    or n.op == "mari_user_partial"
+                    or n.op.startswith("attn_user")), n.name
+        # no user-domain *feature* input survives in stage 2: the user tower
+        # was peeled off, only boundary activations/partials cross over
+        s2_inputs = {n.name for n in split.stage2.input_nodes()}
+        assert "user_profile" not in s2_inputs
+        assert split.n_precompute_nodes > 0
+
+    def test_mari_dense_partials_peeled(self):
+        graph, params, _, _ = _paper_setup()
+        mg, _, conv = apply_mari(graph, params)
+        split = split_two_stage(mg)
+        for r in conv.rewrites:
+            assert f"{r.dense}::u" in split.stage1.nodes
+            node2 = split.stage2.nodes[r.dense]
+            assert node2.attrs["precomputed_user"]
+            assert not any(lab == "user" for lab, _ in node2.attrs["groups"])
+
+    def test_attention_one_shot_tensors_peeled(self):
+        graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
+                             mlp=(24, 12), item_vocab=128)
+        conv = mari_rewrite(graph, reparam_attention=True)
+        split = split_two_stage(conv.graph)
+        assert "din_attn::u_part" in split.stage1.nodes
+        assert "din_attn::T" in split.stage1.nodes
+        assert split.stage2.nodes["din_attn"].attrs["precomputed"]
+
+
+class TestLossless:
+    """stage-1 ∘ stage-2 == single-graph uoi == vani, to f32 tolerance."""
+
+    @pytest.mark.parametrize("fragment", [False, True])
+    def test_paper_model(self, fragment):
+        graph, params, feeds, user_in = _paper_setup()
+        ref = Executor(graph, "vani").run(params, feeds)
+        mg, mp, _ = apply_mari(graph, params, fragment=fragment)
+        uoi = Executor(mg, "uoi").run(mp, feeds)
+        split = split_two_stage(mg)
+        s1_in = {n.name for n in split.stage1.input_nodes()}
+        reps = Executor(split.stage1, "uoi").run(
+            mp, {k: v for k, v in feeds.items() if k in s1_in})
+        cand = {k: v for k, v in feeds.items() if k not in user_in}
+        out = Executor(split.stage2, "uoi").run(mp, {**reps, **cand})
+        for o in graph.outputs:
+            np.testing.assert_allclose(out[o], uoi[o], rtol=1e-5, atol=1e-5)
+            np.testing.assert_allclose(out[o], ref[o], rtol=2e-4, atol=2e-4)
+
+    def test_din_with_reparam_attention(self):
+        graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
+                             mlp=(24, 12), item_vocab=128)
+        params = init_graph_params(graph, jax.random.PRNGKey(0))
+        feeds = make_recsys_feeds(graph, 11, jax.random.PRNGKey(1))
+        ref = Executor(graph, "vani").run(params, feeds)["logit"]
+        conv = mari_rewrite(graph, reparam_attention=True)
+        mp = convert_params(conv, params)
+        split = split_two_stage(conv.graph)
+        s1_in = {n.name for n in split.stage1.input_nodes()}
+        user_in = {n.name for n in graph.input_nodes()
+                   if n.attrs.get("domain") == "user"}
+        reps = Executor(split.stage1, "uoi").run(
+            mp, {k: v for k, v in feeds.items() if k in s1_in})
+        cand = {k: v for k, v in feeds.items() if k not in user_in}
+        out = Executor(split.stage2, "uoi").run(mp, {**reps, **cand})["logit"]
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+
+class TestEngineCaching:
+    def test_repeat_user_skips_stage1(self):
+        graph, params, feeds, user_in = _paper_setup()
+        eng = ServingEngine(graph, params, mode="mari", max_batch=16)
+        assert eng.two_stage
+        r1 = eng.score(_request(feeds, user_in, user_id=5))
+        assert not r1.user_cache_hit and eng.stage1_calls == 1
+        r2 = eng.score(_request(feeds, user_in, user_id=5))
+        # no user-only node re-executed: the stage-1 counter did not move
+        assert r2.user_cache_hit and eng.stage1_calls == 1
+        np.testing.assert_allclose(r1.scores, r2.scores, atol=1e-6)
+
+    def test_feature_version_invalidates(self):
+        graph, params, feeds, user_in = _paper_setup()
+        eng = ServingEngine(graph, params, mode="mari", max_batch=16)
+        eng.score(_request(feeds, user_in, user_id=5, version=0))
+        r = eng.score(_request(feeds, user_in, user_id=5, version=1))
+        assert not r.user_cache_hit and eng.stage1_calls == 2
+
+    def test_new_version_evicts_old(self):
+        """One live cache entry per user: a version bump frees the old reps
+        instead of accumulating them."""
+        graph, params, feeds, user_in = _paper_setup()
+        eng = ServingEngine(graph, params, mode="mari", max_batch=16)
+        for v in range(4):
+            eng.score(_request(feeds, user_in, user_id=5, version=v))
+        assert len(eng._user_cache) == 1
+        assert (5, 3) in eng._user_cache
+
+    def test_invalidate_user_drops_all_versions(self):
+        graph, params, feeds, user_in = _paper_setup()
+        eng = ServingEngine(graph, params, mode="mari", max_batch=16)
+        eng.score(_request(feeds, user_in, user_id=5, version=0))
+        eng.score(_request(feeds, user_in, user_id=5, version=1))
+        eng.invalidate_user(5)
+        r = eng.score(_request(feeds, user_in, user_id=5, version=0))
+        assert not r.user_cache_hit
+
+    def test_modes_agree_two_stage(self):
+        graph, params, feeds, user_in = _paper_setup()
+        outs = {}
+        for mode in ("vani", "uoi", "mari"):
+            eng = ServingEngine(graph, params, mode=mode, max_batch=16)
+            outs[mode] = eng.score(_request(feeds, user_in)).scores
+        np.testing.assert_allclose(outs["uoi"], outs["vani"],
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(outs["mari"], outs["vani"],
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestUnservableSplit:
+    """A domain-less input pulled into the user closure cannot be fed under
+    the user/candidate request contract: auto two-stage falls back to
+    single-stage, explicit two_stage=True raises."""
+
+    def _graph(self):
+        from repro.graph.ir import GraphBuilder
+        b = GraphBuilder()
+        u = b.input("u", (6,), "user")
+        ctx = b.input("ctx", (4,), None)        # uncolored global context
+        i = b.input("i", (5,), "item")
+        uc = b.concat("uc", [u, ctx])           # yellow closure pulls in ctx
+        c = b.concat("c", [uc, i])
+        f = b.dense("f", c, 8, activation="relu")
+        out = b.dense("out", f, 1)
+        b.output(out)
+        return b.graph
+
+    def test_auto_falls_back_single_stage(self):
+        g = self._graph()
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        eng = ServingEngine(g, params, mode="mari", max_batch=16)
+        assert not eng.two_stage
+        B = 7
+        feeds = {
+            "u": jax.random.normal(jax.random.PRNGKey(1), (1, 6)),
+            "ctx": jax.random.normal(jax.random.PRNGKey(2), (1, 4)),
+            "i": jax.random.normal(jax.random.PRNGKey(3), (B, 5)),
+        }
+        ref = Executor(g, "vani").run(params, feeds)["out"]
+        req = ServeRequest(0, {"u": feeds["u"], "ctx": feeds["ctx"]},
+                           {"i": feeds["i"]})
+        np.testing.assert_allclose(eng.score(req).scores, np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_explicit_two_stage_raises(self):
+        g = self._graph()
+        params = init_graph_params(g, jax.random.PRNGKey(0))
+        with pytest.raises(ValueError, match="non-user feeds"):
+            ServingEngine(g, params, mode="mari", max_batch=16,
+                          two_stage=True)
+
+
+class TestBucketedBatching:
+    """Regression for the _split tail-padding bug: a lone chunk smaller than
+    max_batch used to keep its ragged shape and recompile per pool size."""
+
+    def test_single_compile_across_pool_sizes(self):
+        graph, params, feeds, user_in = _paper_setup(scale=0.03)
+        eng = ServingEngine(graph, params, mode="mari", max_batch=128)
+        for n in (100, 1000, 3000):
+            feeds_n = make_recsys_feeds(graph, n, jax.random.PRNGKey(n))
+            r = eng.score(_request(feeds_n, user_in))
+            assert r.scores.shape[0] == n
+        assert eng.stage2_compilations == 1
+
+    def test_pow2_bucket_bound(self):
+        import math
+        graph, params, feeds, user_in = _paper_setup(scale=0.03)
+        eng = ServingEngine(graph, params, mode="mari", max_batch=4096)
+        sizes = (100, 1000, 3000)
+        for n in sizes:
+            feeds_n = make_recsys_feeds(graph, n, jax.random.PRNGKey(n))
+            eng.score(_request(feeds_n, user_in))
+        bound = math.ceil(math.log2(max(sizes) / min(sizes))) + 1
+        assert eng.stage2_compilations <= bound
+
+    def test_scores_unaffected_by_padding(self):
+        graph, params, feeds, user_in = _paper_setup(scale=0.03, batch=40)
+        big = ServingEngine(graph, params, mode="mari", max_batch=4096)
+        small = ServingEngine(graph, params, mode="mari", max_batch=16)
+        r_big = big.score(_request(feeds, user_in))
+        r_small = small.score(_request(feeds, user_in))
+        assert r_small.n_batches == 3
+        np.testing.assert_allclose(r_big.scores, r_small.scores,
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestEnginePallas:
+    def test_pallas_engine_matches_jnp_engine(self):
+        graph, params, feeds, user_in = _paper_setup()
+        ref = ServingEngine(graph, params, mode="mari", max_batch=16)
+        pal = ServingEngine(graph, params, mode="mari", max_batch=16,
+                            use_pallas=True)
+        r1 = ref.score(_request(feeds, user_in))
+        r2 = pal.score(_request(feeds, user_in))
+        np.testing.assert_allclose(r2.scores, r1.scores, rtol=1e-4, atol=1e-4)
