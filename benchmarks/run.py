@@ -179,11 +179,17 @@ def bench_table1(iters: int = 30):
 # Two-stage serving: vanilla/uoi/mari latency, cold vs user-cache-hit
 # ---------------------------------------------------------------------------
 
-def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15):
-    """End-to-end ServingEngine latency on paper_ranking at candidate pool B.
+def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
+                qps_users: int = 8, qps_passes: int = 9):
+    """End-to-end ServingEngine latency + throughput on paper_ranking.
 
-    cold = new (user, feature_version) each request (stage 1 must run);
-    hit  = repeat user (stage 1 skipped from the representation cache).
+    Latency rows (per-request, candidate pool B):
+      cold = new (user, feature_version) each request (stage 1 must run);
+      hit  = repeat user (stage 1 skipped from the representation cache).
+    Throughput rows (``serve/<mode>/qps``): a burst of ``qps_users``
+    concurrent users, each with a B-candidate pool, scored sequentially
+    (coalesce=off) vs through the async CoalescingBatcher (coalesce=on —
+    cross-user chunks packed into shared stage-2 buckets).
     Emits CSV rows and a structured payload for --json.
     """
     import numpy as np
@@ -191,7 +197,7 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15):
     from repro.graph.executor import init_graph_params
     from repro.models.ranking import (PaperRankingConfig,
                                       build_paper_ranking_model)
-    from repro.serve.engine import ServeRequest, ServingEngine
+    from repro.serve import CoalescingBatcher, ServeRequest, ServingEngine
 
     graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(scale))
     params = init_graph_params(graph, jax.random.PRNGKey(0))
@@ -203,7 +209,10 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15):
 
     modes = {}
     for mode in ("vani", "uoi", "mari"):
-        eng = ServingEngine(graph, params, mode=mode, max_batch=4096)
+        # hedging off: duplicate executions on this shared CPU would
+        # contaminate the latency/throughput rows the trajectory tracks
+        eng = ServingEngine(graph, params, mode=mode, max_batch=4096,
+                            hedging=False)
         req = lambda uid, ver=0: ServeRequest(
             user_id=uid, user_feeds=ufeeds, candidate_feeds=cand,
             feature_version=ver)
@@ -224,6 +233,42 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15):
              f"B={B};two_stage={eng.two_stage}")
         _row(f"serve/{mode}/hit", hit_ms * 1e3,
              f"B={B};hit_speedup={cold_ms / hit_ms:.2f}x")
+
+        # -- throughput: cross-user coalescing on vs off. Passes are
+        # interleaved (off, on, off, on, ...) so machine-load drift lands on
+        # both sides instead of whichever ran second; medians per side. ----
+        import time as _time
+        burst = [req(uid) for uid in range(qps_users)]
+        for r in burst:                         # warm every user's rep cache
+            eng.score(r)
+        seq_ref = [eng.score(r) for r in burst]
+        walls_off, walls_on = [], []
+        with CoalescingBatcher(eng, linger_ms=1.0) as batcher:
+            co_ref = batcher.score_many(burst)  # compile coalesced shapes
+            for _ in range(qps_passes):
+                t0 = _time.perf_counter()
+                for r in burst:
+                    eng.score(r)
+                walls_off.append(_time.perf_counter() - t0)
+                t0 = _time.perf_counter()
+                batcher.score_many(burst)
+                walls_on.append(_time.perf_counter() - t0)
+        qps_off = qps_users / float(np.median(walls_off))
+        qps_on = qps_users / float(np.median(walls_on))
+        for s, c in zip(seq_ref, co_ref):       # lossless sanity
+            assert np.array_equal(s.scores, c.scores), \
+                "coalescing changed scores"
+        modes[mode]["qps"] = {
+            "coalesce_off": round(qps_off, 1), "coalesce_on": round(qps_on, 1),
+            "users": qps_users, "B": B,
+            "speedup": round(qps_on / qps_off, 3),
+        }
+        _row(f"serve/{mode}/qps/coalesce=off", 1e6 / qps_off,
+             f"B={B};users={qps_users};qps={qps_off:.1f}")
+        _row(f"serve/{mode}/qps/coalesce=on", 1e6 / qps_on,
+             f"B={B};users={qps_users};qps={qps_on:.1f};"
+             f"vs_off={qps_on / qps_off:.2f}x")
+        eng.close()
     _JSON_EXTRA["serve"] = {"config": "paper_ranking", "scale": scale,
                             "B": B, "iters": iters, "modes": modes}
 

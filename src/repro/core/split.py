@@ -18,11 +18,21 @@ every candidate in the batch. ``split_two_stage`` cuts a graph into:
   content-addressed and cached by the serving engine.
 
 * **stage 2** — the batched residual subgraph: every Blue node, with user
-  activations arriving as batch-1 ``input`` nodes (domain ``"user"``) whose
-  names equal the stage-1 output names, so ``stage2_feeds = {**stage1_out,
+  activations arriving as ``input`` nodes (domain ``"user"``) whose names
+  equal the stage-1 output names, so ``stage2_feeds = {**stage1_out,
   **candidate_feeds}``. Rewritten ``mari_dense`` nodes consume the
   precomputed partial as their accumulator init (``precomputed_user``);
   decomposed attention consumes ``u_part``/``T`` (``precomputed``).
+
+  Stage-2 user inputs accept TWO batch layouts (the executor dispatches on
+  the leading dim): **batch-1** — one user per call, broadcast over all B
+  candidate rows (the classic Fig. 2 contract) — or **row-wise batch-B** —
+  a cross-user coalesced batch where candidate row b carries *its own*
+  user's cached stage-1 outputs, produced by gathering a stacked (U, ...)
+  rep table with a per-row user index (``reps[name][user_index]``). The
+  serving engine's coalescing runtime uses the row-wise form;
+  ``boundary_specs`` gives the per-example shape of every crossing value so
+  the runtime can stack/pad rep tables without re-running shape inference.
 
 Both stages share ONE params dict: partial nodes reference their source
 node's params via ``attrs["param_of"]`` indirection, so no weight is copied
@@ -46,6 +56,11 @@ class TwoStageSplit:
     boundary: tuple[str, ...]     # stage-1 output names == stage-2 user inputs
     user_nodes: frozenset[str]    # stage-1 node set in the source graph
     n_precompute_nodes: int       # compute nodes skipped on a user-cache hit
+    # per-example (batch-dim-free) shape of every stage-2 user-side input:
+    # boundary activations AND rewritten-unit partials — the contract the
+    # coalescing runtime stacks into (U, ...) rep tables
+    boundary_specs: dict[str, tuple[int, ...]] = dataclasses.field(
+        default_factory=dict)
 
     def summary(self) -> str:
         return (f"split: stage1 {len(self.stage1.nodes)} nodes "
@@ -203,7 +218,10 @@ def split_two_stage(graph: Graph, gca: GCAResult | None = None) -> TwoStageSplit
     s2 = s2.dce()
 
     n_compute = sum(1 for n in s1.nodes.values() if n.op != "input")
+    specs = {name: tuple(shapes[name]) for name in boundary}
+    specs.update({p.name: tuple(pshape[p.name]) for p in partials})
     return TwoStageSplit(stage1=s1, stage2=s2,
                          boundary=tuple(s1.outputs),
                          user_nodes=frozenset(pre),
-                         n_precompute_nodes=n_compute)
+                         n_precompute_nodes=n_compute,
+                         boundary_specs=specs)

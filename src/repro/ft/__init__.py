@@ -2,5 +2,11 @@ from repro.ft.failures import (  # noqa: F401
     HeartbeatMonitor,
     ElasticPlan,
     plan_elastic_remesh,
-    HedgePolicy,
 )
+
+
+def __getattr__(name):            # lazy back-compat re-export (PEP 562):
+    if name == "HedgePolicy":     # keeps `import repro.ft` free of the
+        from repro.serve.hedging import HedgePolicy  # serve/JAX stack
+        return HedgePolicy
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -13,6 +13,13 @@ Batch semantics — the key to VanI / UOI / MaRI:
 * ``mari`` is not a mode here: the MaRI pass rewrites eligible ``dense``
   nodes into ``mari_dense`` nodes (repro.core.mari) and the rewritten graph
   runs in ``uoi`` mode — the tile is deferred *through* the matmul (Eq. 7).
+* **row-wise user values** — user-side feeds (raw inputs, stage-2 boundary
+  activations, rewritten-unit partials) may also arrive at batch B, where
+  row b carries user b's value (a cross-user coalesced serving batch,
+  gathered by ``reps[user_index]`` upstream). Every op dispatches on the
+  leading dim: batch-1 operands take the broadcast (deferred-tile) forms,
+  batch-B operands the row-wise forms; results are row-identical either
+  way.
 """
 from __future__ import annotations
 
@@ -85,13 +92,31 @@ def _bcast_batch(xs: list[Array]) -> list[Array]:
     return out
 
 
+def _concat_xs(xs: list[Array]) -> Array:
+    xs = _bcast_batch(xs) if len({x.shape[0] for x in xs}) > 1 else xs
+    return jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
+
+
+def _concat_ws(ws: list[Array]) -> Array:
+    return jnp.concatenate(ws, axis=0) if len(ws) > 1 else ws[0]
+
+
 def _mari_dense_operands(node: Node, params: dict, vals: dict):
     """Assemble (x, w) pairs + accumulator init + bias for a ``mari_dense``.
 
     Returns (parts, acc0, bias): ``parts`` is a list of (x, w) whose products
     sum to the pre-activation output (minus acc0/bias); ``acc0`` is a
-    precomputed (1, units) row (two-stage serving) or None; ``bias`` is the
-    bias vector or None.
+    precomputed user partial — a (1, units) row, or a row-wise (B, units)
+    block when stage 2 serves a cross-user coalesced batch — or None;
+    ``bias`` is the bias vector or None.
+
+    The batched (non-user) groups are fused into ONE (x, w) stream via the
+    block-matmul identity Σ_g x_g W_g == concat(x_g) @ stack(W_g) — matching
+    the Pallas kernel's single MXU stream. When the serving engine has
+    pre-concatenated the grouped weights at build time (``w_cat`` in the
+    node's params), the per-call weight concat disappears from the hot path;
+    either way the streamed operands are identical, so scores are
+    bit-identical with pre-concat on or off.
     """
     attrs = node.attrs
     p = params[node.name]
@@ -104,23 +129,40 @@ def _mari_dense_operands(node: Node, params: dict, vals: dict):
     parts: list[tuple[Array, Array]] = []
     acc0 = vals[node.inputs[0]] if attrs.get("precomputed_user") else None
     if attrs.get("fragment", False):
-        # Table-3 regime: one small matmul per original concat segment. With
-        # a precomputed partial, inputs[0] is the partial and seg_param_idx
-        # holds the original segment index of each remaining input.
         if acc0 is not None:
-            idx_names = zip(attrs["seg_param_idx"], node.inputs[1:])
+            # Stage-2 residual of a split fragmented node: every remaining
+            # segment is candidate-side — fuse them into one stream instead
+            # of paying the Table-3 per-fragment launches while serving.
+            x = _concat_xs([seg(nm) for nm in node.inputs[1:]])
+            w = p.get("w_cat")
+            if w is None:
+                w = _concat_ws([p[f"w_seg{i}"]
+                                for i in attrs["seg_param_idx"]])
+            parts.append((x, w))
         else:
-            idx_names = enumerate(node.inputs)
-        for i, name in idx_names:
-            parts.append((seg(name), p[f"w_seg{i}"]))
+            # Table-3 regime: one small matmul per original concat segment
+            # (batch-1-ness varies per segment, so no static fusion).
+            for i, name in enumerate(node.inputs):
+                parts.append((seg(name), p[f"w_seg{i}"]))
     else:
         # "groups" indices already point into node.inputs on both paths (the
-        # split pass remaps them past the partial at position 0).
+        # split pass remaps them past the partial at position 0). The user
+        # group (present only when un-peeled) stays its own one-shot part;
+        # all other groups fuse into a single batched stream.
+        rest_xs: list[Array] = []
+        rest_ws: list[Array] = []
         for label, seg_idx in attrs["groups"]:
-            xs = [seg(node.inputs[i]) for i in seg_idx]
-            xs = _bcast_batch(xs) if len({x.shape[0] for x in xs}) > 1 else xs
-            x = jnp.concatenate(xs, axis=-1) if len(xs) > 1 else xs[0]
-            parts.append((x, p[f"w_{label}"]))
+            if label == "user":
+                parts.append((_concat_xs([seg(node.inputs[i])
+                                          for i in seg_idx]), p["w_user"]))
+            else:
+                rest_xs.extend(seg(node.inputs[i]) for i in seg_idx)
+                rest_ws.append(p[f"w_{label}"])
+        if rest_xs:
+            w = p.get("w_cat")
+            if w is None:
+                w = _concat_ws(rest_ws)
+            parts.append((_concat_xs(rest_xs), w))
     bias = p["b"] if attrs.get("use_bias", True) else None
     return parts, acc0, bias
 
@@ -265,29 +307,43 @@ class Executor:
                 mask = jnp.ones(keys.shape[:-1], bool)
 
             if n.attrs.get("decomposed") and "w_kd" in p["layer_0"]:
-                # Beyond-paper re-parameterized unit (core.mari.AttnRewrite):
-                # keys are (1, L, D) one-shot; (B, L, 4D) never materializes.
+                # Beyond-paper re-parameterized unit (core.mari.AttnRewrite).
+                # The user-side tensors carry batch 1 (one user per batch —
+                # the (B, L, 4D) feature tensor never materializes and the
+                # broadcast einsums realize the deferred tile) OR batch B
+                # (row-wise: a cross-user coalesced batch where row b holds
+                # user b's gathered tensors).
                 l0 = p["layer_0"]
-                k1 = keys[0]                                    # (L, D)
                 if n.attrs.get("precomputed"):
                     # Two-stage serving: one-shot tensors arrive from stage 1
                     # (core.split) — bias is folded into u_part there.
-                    u_part = ins[-2][0]                         # (L, h)
-                    t = ins[-1][0]                              # (L, D, h)
+                    u_part = ins[-2]                    # (1|B, L, h)
+                    t = ins[-1]                         # (1|B, L, D, h)
                 else:
-                    u_part = k1 @ l0["w_kd"] + l0["b"]          # (L, h) once
-                    t = k1[:, :, None] * l0["w_p"][None]        # (L, D, h) once
-                q_part = q @ l0["w_qd"]                         # (B, h)
-                p_part = jnp.einsum("bd,ldh->blh", q, t)        # (B, L, h)
-                h = jax.nn.relu(u_part[None] + q_part[:, None, :] + p_part)
+                    if keys.shape[0] == 1:
+                        u_part = (keys[0] @ l0["w_kd"] + l0["b"])[None]
+                        t = (keys[0][:, :, None] * l0["w_p"][None])[None]
+                    else:                               # row-wise keys
+                        u_part = keys @ l0["w_kd"] + l0["b"]
+                        t = keys[..., None] * l0["w_p"][None, None]
+                q_part = q @ l0["w_qd"]                 # (B, h)
+                if t.shape[0] == 1 and q.shape[0] != 1:
+                    p_part = jnp.einsum("bd,ldh->blh", q, t[0])
+                    h = jax.nn.relu(u_part[0][None] + q_part[:, None, :]
+                                    + p_part)
+                else:
+                    p_part = jnp.einsum("bd,bldh->blh", q, t)
+                    h = jax.nn.relu(u_part + q_part[:, None, :] + p_part)
                 for li in range(1, nlayers):
                     h = dense_apply(p[f"layer_{li}"], h)
                     if li < nlayers - 1:
                         h = jax.nn.relu(h)
-                scores = h[..., 0]                              # (B, L)
+                scores = h[..., 0]                      # (B, L)
                 scores = jnp.where(mask, scores, -1e30)
                 w = jax.nn.softmax(scores, axis=-1)
-                return jnp.einsum("bl,ld->bd", w, k1)
+                if keys.shape[0] == 1 and w.shape[0] != 1:
+                    return jnp.einsum("bl,ld->bd", w, keys[0])
+                return jnp.einsum("bl,bld->bd", w, keys)
 
             def mlp_apply(x):
                 for li in range(nlayers):

@@ -55,22 +55,36 @@ def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref, *, activation):
                    static_argnames=("bm", "bn", "bk", "activation", "interpret"))
 def mari_matmul_kernel(x_rest, w_rest, u_row, *, bm=128, bn=128, bk=512,
                        activation="identity", interpret=False):
-    """act(x_rest (B, Dr) @ w_rest (Dr, d) + broadcast u_row (1, d)).
+    """act(x_rest (B, Dr) @ w_rest (Dr, d) + u_row).
+
+    ``u_row`` is the accumulator init in one of two layouts:
+
+    * (1, d) — one user per batch (classic Eq. 7): the row is broadcast
+      into every output tile.
+    * (B, d) — row-wise (cross-user coalesced serving): row b carries user
+      b's precomputed partial, so each output tile initializes from its own
+      row block. The broadcast in the init is then a no-op.
 
     Caller guarantees B % bm == 0, d % bn == 0, Dr % bk == 0 (ops.py pads).
     """
     B, Dr = x_rest.shape
     d = w_rest.shape[1]
     assert B % bm == 0 and d % bn == 0 and Dr % bk == 0, (B, Dr, d, bm, bn, bk)
+    if u_row.shape[0] not in (1, B):
+        raise ValueError(f"u_row rows must be 1 or B={B}, got {u_row.shape}")
     if activation not in _EPILOGUES:
         raise ValueError(f"unsupported epilogue activation {activation!r}")
+    if u_row.shape[0] == 1:
+        u_spec = pl.BlockSpec((1, bn), lambda i, j, k: (0, j))
+    else:                                 # row-wise: follow the output tiling
+        u_spec = pl.BlockSpec((bm, bn), lambda i, j, k: (i, j))
     return pl.pallas_call(
         functools.partial(_kernel, activation=activation),
         grid=(B // bm, d // bn, Dr // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x tile
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w tile
-            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),    # user row tile
+            u_spec,                                           # acc-init tile
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((B, d), x_rest.dtype),

@@ -40,8 +40,10 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
 
     Each x is (1, D_g) (user side — folded into the broadcast row) or
     (B, D_g) (batched side — streamed through the MXU). ``acc0`` is an
-    optional precomputed (1, d) row (two-stage serving partial) added to the
-    accumulator init. interpret=True on CPU (validation); False on TPU.
+    optional precomputed partial added to the accumulator init — a (1, d)
+    row (one user per batch) or a row-wise (B, d) block (cross-user
+    coalesced serving: row b carries user b's partial). interpret=True on
+    CPU (validation); False on TPU.
     """
     d = parts[0][1].shape[1]
     user = [(x, w) for x, w in parts if x.shape[0] == 1]
@@ -53,25 +55,31 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
     for x, w in user:
         u = u + x.astype(jnp.float32) @ w.astype(jnp.float32)
     if acc0 is not None:
-        u = u + acc0.astype(jnp.float32)
+        u = u + acc0.astype(jnp.float32)   # (B, d) acc0 broadcasts u row-wise
     if b is not None:
         u = u + b.astype(jnp.float32)
 
-    if not rest:  # B == 1: everything is one-shot, no batched stream left
+    if not rest:  # no batched stream left: acc-init row/block IS the output
         out = _EPILOGUES[activation](u)
         return out.astype(parts[0][0].dtype)
 
     B = max(x.shape[0] for x, _ in rest)
-    x_rest = jnp.concatenate(
-        [jnp.broadcast_to(x, (B,) + x.shape[1:]) for x, _ in rest], axis=-1)
-    w_rest = jnp.concatenate([w for _, w in rest], axis=0)
+    if len(rest) == 1 and rest[0][0].shape[0] == B:
+        # single pre-concatenated stream (engine-side weight pre-concat):
+        # no per-call operand copies at all
+        x_rest, w_rest = rest[0]
+    else:
+        x_rest = jnp.concatenate(
+            [jnp.broadcast_to(x, (B,) + x.shape[1:]) for x, _ in rest], axis=-1)
+        w_rest = jnp.concatenate([w for _, w in rest], axis=0)
 
     Dr = x_rest.shape[1]
     bm, bn, bk = _pick_blocks(B, Dr, d, x_rest.dtype.itemsize)
     Bp, Drp, dp = round_up(B, bm), round_up(Dr, bk), round_up(d, bn)
     xp = jnp.pad(x_rest, ((0, Bp - B), (0, Drp - Dr)))
     wp = jnp.pad(w_rest, ((0, Drp - Dr), (0, dp - d)))
-    up = jnp.pad(u, ((0, 0), (0, dp - d)))
+    # row-wise acc-init pads its batch dim alongside x; a single row does not
+    up = jnp.pad(u, ((0, Bp - B if u.shape[0] == B else 0), (0, dp - d)))
     out = mari_matmul_kernel(xp, wp, up, bm=bm, bn=bn, bk=bk,
                              activation=activation, interpret=interpret)
     return out[:B, :d]

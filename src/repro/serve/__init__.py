@@ -1,1 +1,28 @@
-from repro.serve.engine import ServingEngine, ServeRequest, ServeResult  # noqa: F401
+"""Serving runtime for ranking graphs — the inference workflow of Fig. 2
+grown into an async, multi-user subsystem:
+
+* ``engine``  — ``ServingEngine``: per-request orchestration. Stage 1 (the
+  user-only precompute subgraph of ``repro.core.split``) runs once per
+  (user, feature_version) and its outputs are cached; stage 2 (the batched
+  residual) is ONE row-wise executable family — each candidate row gathers
+  its own user's cached reps via a per-row user index — so a single request
+  (U=1) and a cross-user coalesced batch run the same code and produce
+  bit-identical scores. Options: fused Pallas ``mari_dense`` dispatch,
+  build-time grouped-weight pre-concatenation, and candidate-axis device
+  sharding (``jax.sharding``; rep tables replicated).
+* ``batcher`` — ``CoalescingBatcher``: async request queue that packs
+  candidate chunks from different users into shared power-of-two stage-2
+  buckets (cross-user batching).
+* ``cache``   — ``UserRepCache``: bounded LRU user-representation store
+  with eviction accounting and per-user invalidation.
+* ``hedging`` — ``HedgePolicy`` (rolling-p99 decision) + ``HedgedRunner``
+  (real duplicate execution of straggling chunks, first result wins).
+"""
+from repro.serve.batcher import CoalescingBatcher  # noqa: F401
+from repro.serve.cache import UserRepCache  # noqa: F401
+from repro.serve.engine import (  # noqa: F401
+    ServeRequest,
+    ServeResult,
+    ServingEngine,
+)
+from repro.serve.hedging import HedgedRunner, HedgePolicy  # noqa: F401

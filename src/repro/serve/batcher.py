@@ -1,0 +1,164 @@
+"""Async request queue that coalesces candidate chunks across users.
+
+At "millions of users" scale the compiled stage-2 buckets sit mostly idle
+if each request is served alone: every ragged pool pays its own padding and
+every call its own dispatch. ``CoalescingBatcher`` is the standard
+industrial answer — requests from *different users* are queued, and their
+candidate chunks are packed into shared power-of-two buckets, each executed
+as ONE cross-user stage-2 call (row-wise user reps gathered by a per-row
+user index; see ``ServingEngine.score_coalesced``).
+
+Usage::
+
+    batcher = CoalescingBatcher(engine, linger_ms=2.0)
+    fut = batcher.submit(req)          # non-blocking; Future[ServeResult]
+    ...
+    result = fut.result()
+    batcher.close()
+
+or synchronously for a burst of concurrent requests::
+
+    results = batcher.score_many(reqs)
+
+A single worker thread drains the queue: the first waiting request opens a
+batch, then the worker lingers up to ``linger_ms`` (or until ``max_batch``
+candidate rows / ``max_coalesce`` requests are waiting) collecting
+co-arriving requests before handing the group to the engine. Coalesced
+scores are bit-identical to per-request ``engine.score`` — both run the
+same row-wise executable family.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Sequence
+
+from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
+
+
+class CoalescingBatcher:
+    def __init__(self, engine: ServingEngine, *, linger_ms: float = 2.0,
+                 max_coalesce: int = 64, auto_start: bool = True):
+        self.engine = engine
+        self.linger_ms = linger_ms
+        self.max_coalesce = max_coalesce
+        self._q: queue.Queue = queue.Queue()
+        self._stop = threading.Event()
+        self._lock = threading.Lock()     # serializes submit vs close
+        self._worker: threading.Thread | None = None
+        self.batches = 0              # engine handoffs
+        self.coalesced_requests = 0   # requests scored in a >1-request group
+        self.requests = 0
+        if auto_start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(
+            target=self._run, name="coalescing-batcher", daemon=True)
+        self._worker.start()
+
+    def close(self) -> None:
+        """Stop the worker after the queue drains; fail anything stranded."""
+        with self._lock:              # no submit can interleave past here
+            self._stop.set()
+            self._q.put(None)         # wake the worker
+        if self._worker is not None:
+            self._worker.join(timeout=30)
+            self._worker = None
+        # a request that raced the shutdown may still sit in the dead queue;
+        # its waiter must not block forever
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is not None and item[1].set_running_or_notify_cancel():
+                item[1].set_exception(RuntimeError("batcher closed"))
+
+    def __enter__(self) -> "CoalescingBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- submission ---------------------------------------------------------
+    def submit(self, req: ServeRequest) -> "Future[ServeResult]":
+        """Enqueue a request; resolves once its group has been scored."""
+        with self._lock:              # atomic vs the close() shutdown decision
+            if (self._stop.is_set() or self._worker is None
+                    or not self._worker.is_alive()):
+                raise RuntimeError("batcher is not running (call start())")
+            fut: Future = Future()
+            self.requests += 1
+            self._q.put((req, fut))
+        return fut
+
+    def score_many(self, reqs: Sequence[ServeRequest]) -> list[ServeResult]:
+        """Submit a burst of concurrent requests; wait for all results."""
+        futs = [self.submit(r) for r in reqs]
+        return [f.result() for f in futs]
+
+    # -- worker -------------------------------------------------------------
+    def _candidate_rows(self, req: ServeRequest) -> int:
+        return next(iter(req.candidate_feeds.values())).shape[0]
+
+    def _run(self) -> None:
+        import time
+        while True:
+            try:
+                item = self._q.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return
+                continue
+            if item is None:
+                if self._stop.is_set() and self._q.empty():
+                    return
+                continue
+            group = [item]
+            rows = self._candidate_rows(item[0])
+            deadline = time.perf_counter() + self.linger_ms / 1e3
+            while (len(group) < self.max_coalesce
+                   and rows < self.engine.max_batch):
+                timeout = deadline - time.perf_counter()
+                if timeout <= 0:
+                    break
+                try:
+                    nxt = self._q.get(timeout=timeout)
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    continue
+                group.append(nxt)
+                rows += self._candidate_rows(nxt[0])
+            self._score_group(group)
+            if self._stop.is_set() and self._q.empty():
+                return
+
+    def _score_group(self, group: list) -> None:
+        # claim each future before doing work: a waiter that cancelled while
+        # its request sat queued is dropped here, and a claimed (RUNNING)
+        # future can no longer be cancelled — so set_result below cannot
+        # race a cancel and kill the worker with InvalidStateError
+        group = [(req, fut) for req, fut in group
+                 if fut.set_running_or_notify_cancel()]
+        if not group:
+            return
+        reqs = [req for req, _ in group]
+        try:
+            results = self.engine.score_coalesced(reqs)
+        except BaseException as e:          # propagate to every waiter
+            for _, fut in group:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        self.batches += 1
+        if len(group) > 1:
+            self.coalesced_requests += len(group)
+        for (_, fut), res in zip(group, results):
+            fut.set_result(res)

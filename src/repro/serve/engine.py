@@ -1,41 +1,56 @@
-"""Serving runtime for ranking graphs.
+"""Per-request orchestration for the serving runtime (Fig. 2 made a system).
 
-Implements the inference workflow of Fig. 2 as a two-stage compiled
-pipeline; a request arrives with one user's features and a candidate set:
+``ServingEngine`` compiles a (MaRI-rewritten) ranking graph into the
+two-stage pipeline of ``repro.core.split`` and scores candidate pools
+against cached user representations. This module is the *orchestration*
+layer of the serve subsystem — queueing/coalescing lives in
+``repro.serve.batcher``, the bounded rep store in ``repro.serve.cache``,
+and straggler hedging in ``repro.serve.hedging``.
 
-  (1) **stage 1 (user-side partial evaluation)** — the user-only precompute
-      subgraph (``repro.core.split``) runs at batch 1 and produces the user
-      activations, the per-``mari_dense`` partials ``x_user @ w_user`` and
-      the decomposed-attention one-shot tensors. Its outputs are cached per
-      ``(user_id, feature_version)``: a repeat user skips the user tower
-      entirely — no user-only node is re-executed.
-  (2) **stage 2 (batched residual)** — the candidate-side subgraph, jitted
-      separately, consumes the cached stage-1 outputs as batch-1 inputs.
-      Candidate pools are split into power-of-two *batch buckets* (tail
-      padded up), so every pool size hits one of at most
-      log2(max_batch / min_bucket) + 1 pre-compiled executables instead of
-      recompiling per distinct size.
-  (3) modes: VanI / UOI / MaRI — MaRI engines hold the rewritten graph +
-      re-parameterized weights from ``repro.core.mari``; ``use_pallas``
-      routes each ``mari_dense`` through the fused Pallas kernel
-      (interpret mode off-TPU).
-  (4) straggling mini-batches are hedged per repro.ft.HedgePolicy.
+Execution model — ONE row-wise stage-2 executable for everything:
+
+  stage2(params, rep_table (U, ...), user_index (B,), candidate_feeds (B, ...))
+      = residual_graph(params, {reps[user_index], candidates})
+
+* a single request is the degenerate case U = 1 (``user_index`` all zero);
+* a cross-user coalesced batch stacks the U users' cached stage-1 outputs
+  into a rep table and lets each candidate row gather its own user's reps.
+
+Because BOTH paths run the identical executable family, coalesced scores
+are bit-identical to per-request scores (proven by test) — row results of
+the row-parallel residual graph do not depend on batch size, packing
+position, or rep-table size.
+
+Knobs beyond the seed engine:
+
+* ``max_cached_users`` — LRU bound on the user-rep cache (+ ``cache_evictions``);
+* ``precat_weights`` — pre-concatenate each stage-2 ``mari_dense``'s grouped
+  weights at build time so the per-call weight concat leaves the hot path
+  (bit-identical: the streamed operands are unchanged);
+* ``hedging`` — REAL duplicate execution of straggling chunks with
+  first-result-wins (``repro.serve.hedging``), replacing the seed's
+  decision-only counter;
+* ``shard_candidates`` — device-shard stage 2 over the candidate axis via
+  ``jax.sharding`` (user rep tables replicated, candidate rows + user index
+  split across devices), the single-host form of multi-host stage-2 sharding.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.mari import mari_rewrite, convert_params
 from repro.core.split import split_two_stage
-from repro.ft.failures import HedgePolicy
 from repro.graph.executor import Executor
 from repro.graph.ir import Graph
+from repro.serve.cache import UserRepCache
+from repro.serve.hedging import HedgedRunner, HedgePolicy
 
 
 @dataclasses.dataclass
@@ -49,11 +64,12 @@ class ServeRequest:
 @dataclasses.dataclass
 class ServeResult:
     scores: np.ndarray
-    latency_ms: float
-    n_batches: int
+    latency_ms: float            # wall time of the (possibly shared) batch
+    n_batches: int               # stage-2 dispatches this request took part in
     user_cache_hit: bool
-    hedged: int = 0
-    stage1_ms: float = 0.0                   # 0 when cached / single-stage
+    hedged: int = 0              # dispatches that launched a duplicate
+    stage1_ms: float = 0.0       # 0 when cached / single-stage
+    coalesced: bool = False      # scored inside a cross-user batch
 
 
 def _next_pow2(n: int) -> int:
@@ -63,18 +79,65 @@ def _next_pow2(n: int) -> int:
     return p
 
 
+def _precat_mari_weights(graph: Graph, params: dict) -> dict:
+    """Pre-concatenate each ``mari_dense``'s batched-group weight blocks.
+
+    The executor (and the Pallas kernel's ops layer) stream the batched
+    side as ONE matmul ``concat(x_g) @ concat(W_g)``; without this, the
+    weight concat is re-emitted inside every jitted call. Building the
+    concatenated block once at engine-build time (stored as ``w_cat``
+    beside the original blocks) removes it from the hot path. Scores are
+    bit-identical either way — the streamed operand values are unchanged.
+    """
+    out = dict(params)
+    for n in graph.nodes.values():
+        if n.op != "mari_dense":
+            continue
+        p = params[n.name]
+        if n.attrs.get("fragment"):
+            if not n.attrs.get("precomputed_user"):
+                continue          # batch-1-ness varies per segment: no fusion
+            ws = [p[f"w_seg{i}"] for i in n.attrs["seg_param_idx"]]
+        else:
+            labels = [lab for lab, _ in n.attrs["groups"] if lab != "user"]
+            ws = [p[f"w_{lab}"] for lab in labels]
+        if len(ws) < 2:
+            continue              # single block: nothing to concatenate
+        out[n.name] = dict(p, w_cat=jnp.concatenate(ws, axis=0))
+    return out
+
+
+@dataclasses.dataclass
+class _ReqInfo:                   # per-request working state inside a batch
+    reps: Mapping[str, jax.Array]
+    hit: bool
+    stage1_ms: float
+    chunks: list[tuple[dict, int]]
+    slot_key: object
+
+
 class ServingEngine:
     def __init__(self, graph: Graph, params: dict, *, mode: str = "mari",
                  max_batch: int = 4096, cache_user_reps: bool = True,
                  two_stage: bool | None = None, min_bucket: int = 128,
-                 use_pallas: bool = False, reparam_attention: bool = False):
+                 use_pallas: bool = False, reparam_attention: bool = False,
+                 fragment: bool = False, group_by_domain: bool = False,
+                 max_cached_users: int | None = None,
+                 precat_weights: bool = True,
+                 shard_candidates: bool = False,
+                 hedging: bool = True,
+                 hedge_policy: HedgePolicy | None = None,
+                 max_users_per_batch: int = 8):
         if mode not in ("vani", "uoi", "mari"):
             raise ValueError(mode)
         self.mode = mode
         self.max_batch = max_batch
         self.min_bucket = min(min_bucket, max_batch)
+        self.max_users_per_batch = max(1, max_users_per_batch)
         if mode == "mari":
-            conv = mari_rewrite(graph, reparam_attention=reparam_attention)
+            conv = mari_rewrite(graph, reparam_attention=reparam_attention,
+                                fragment=fragment,
+                                group_by_domain=group_by_domain)
             self.graph = conv.graph
             self.params = convert_params(conv, params)
             self.conversion = conv
@@ -90,6 +153,7 @@ class ServingEngine:
         self.outputs = list(self.graph.outputs)
         self._user_inputs = [n.name for n in self.graph.input_nodes()
                              if n.attrs.get("domain") == "user"]
+
         if self.two_stage:
             split = split_two_stage(self.graph)
             # The request contract partitions feeds by domain: user_feeds
@@ -106,25 +170,83 @@ class ServingEngine:
                     f"serve single-stage")
             if unservable:
                 self.two_stage = False
+
+        # -- candidate-axis sharding (stage 2): candidate rows + user index
+        # split across devices, params and rep tables replicated -----------
+        self.shard_candidates = shard_candidates
+        self._in_shardings = self._out_shardings = None
+        if shard_candidates:
+            n = len(jax.devices())
+            ndev = 1 << (n.bit_length() - 1)          # largest pow2 <= n
+            self.mesh = Mesh(np.array(jax.devices()[:ndev]), ("cand",))
+            repl = NamedSharding(self.mesh, P())
+            shard = NamedSharding(self.mesh, P("cand"))
+            # pow2 buckets >= ndev divide evenly across the mesh
+            self.min_bucket = min(max(self.min_bucket, ndev), max_batch)
+            self._in_shardings = (repl, repl, shard, shard)
+            self._out_shardings = shard
+        else:
+            self.mesh = None
+
         if self.two_stage:
             self.split = split
-            self._stage1 = jax.jit(
-                Executor(self.split.stage1, "uoi").run)
-            self._stage2 = jax.jit(
-                Executor(self.split.stage2, "uoi", use_pallas=use_pallas).run)
+            # rep-table contract: every user-side stage-2 input must be a
+            # value stage 1 produces (boundary_specs names them) — a split
+            # violating this could never be fed from the cache
+            s2_user = {n.name for n in split.stage2.input_nodes()
+                       if n.attrs.get("domain") == "user"}
+            missing = s2_user - set(split.boundary_specs)
+            if missing:
+                raise ValueError(
+                    f"stage-2 user inputs {sorted(missing)} are not in the "
+                    f"split's boundary_specs — stage 1 cannot supply them")
+            self._stage1 = jax.jit(Executor(self.split.stage1, "uoi").run)
             self._stage1_inputs = {
                 n.name for n in self.split.stage1.input_nodes()}
-            self._step = None
+            batched_graph = self.split.stage2
         else:
             self.split = None
-            self._stage1 = self._stage2 = None
-            ex = Executor(self.graph, exec_mode, use_pallas=use_pallas)
-            self._step = jax.jit(ex.run)
+            self._stage1 = None
+            self._stage1_inputs = None
+            batched_graph = self.graph
+        self.precat_weights = precat_weights
+        if precat_weights:
+            self.params = _precat_mari_weights(batched_graph, self.params)
+        self._stage2 = self._build_rowwise(batched_graph, exec_mode,
+                                           use_pallas)
+
         self.stage1_calls = 0                 # trace counter for the split test
-        self._batch_shapes: set[int] = set()  # distinct bucketed chunk sizes
-        self._user_cache: dict[tuple[int, int], Mapping[str, jax.Array]] = {}
+        self.stage2_calls = 0                 # total row-wise dispatches
+        self.coalesced_calls = 0              # dispatches mixing >1 user slot
+        self._batch_shapes: set[tuple[int, int]] = set()  # (U_pad, bucket)
         self.cache_user_reps = cache_user_reps
-        self.hedge = HedgePolicy()
+        self.cache = UserRepCache(max_users=max_cached_users)
+        self.hedge_policy = hedge_policy or HedgePolicy()
+        self.hedging = hedging
+        self._hedged = (HedgedRunner(self._dispatch, self.hedge_policy)
+                        if hedging else None)
+
+    # -- build-time compilation helpers -------------------------------------
+    def _build_rowwise(self, graph: Graph, exec_mode: str, use_pallas: bool):
+        """Jit the row-wise batched executable:
+        (params, rep_table (U, ...), user_index (B,), cand (B, ...)) -> outs.
+
+        ``rep_table`` holds stage-1 outputs (two-stage) or raw user feeds
+        (single-stage fallback); every entry is gathered per candidate row,
+        so row b computes against user ``user_index[b]``'s representations.
+        """
+        ex = Executor(graph, exec_mode, use_pallas=use_pallas)
+
+        def fn(params, table, user_index, cand):
+            gathered = {k: jnp.take(v, user_index, axis=0)
+                        for k, v in table.items()}
+            return ex.run(params, {**gathered, **cand})
+
+        kwargs = {}
+        if self._in_shardings is not None:
+            kwargs = dict(in_shardings=self._in_shardings,
+                          out_shardings=self._out_shardings)
+        return jax.jit(fn, **kwargs)
 
     # -- candidate mini-batching --------------------------------------------
     def _bucket(self, n: int) -> int:
@@ -133,90 +255,191 @@ class ServingEngine:
         set of compiled shapes."""
         return min(self.max_batch, _next_pow2(max(n, self.min_bucket)))
 
-    def _split(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
+    def _chunk(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
+        """Split a candidate pool into raw (chunk, n_valid) pieces of at most
+        ``max_batch`` rows. Padding happens per *pack* (possibly shared with
+        other users' chunks), not per chunk."""
         n = next(iter(feeds.values())).shape[0]
         out = []
         for lo in range(0, n, self.max_batch):
             hi = min(lo + self.max_batch, n)
-            chunk = {k: v[lo:hi] for k, v in feeds.items()}
-            bucket = self._bucket(hi - lo)
-            if hi - lo < bucket:
-                pad = bucket - (hi - lo)
-                chunk = {k: jnp.concatenate(
-                    [v, jnp.broadcast_to(v[-1:], (pad,) + v.shape[1:])])
-                    for k, v in chunk.items()}
-            self._batch_shapes.add(bucket)
-            out.append((chunk, hi - lo))
+            out.append(({k: v[lo:hi] for k, v in feeds.items()}, hi - lo))
         return out
 
     @property
     def stage2_compilations(self) -> int:
-        """Number of compiled batched-stage executables (distinct buckets)."""
-        fn = self._stage2 if self.two_stage else self._step
+        """Number of compiled batched-stage executables (distinct
+        (rep-table, bucket) shape pairs)."""
         try:
-            return fn._cache_size()
+            return self._stage2._cache_size()
         except AttributeError:  # older/newer jax: fall back to shape count
             return len(self._batch_shapes)
 
-    def _cache_put(self, key: tuple[int, int], reps: Mapping) -> None:
-        """One live entry per user: a new feature_version supersedes (and
-        frees) older versions."""
-        for stale in [k for k in self._user_cache
-                      if k[0] == key[0] and k != key]:
-            del self._user_cache[stale]
-        self._user_cache[key] = reps
+    @property
+    def cache_evictions(self) -> int:
+        """User-rep entries dropped by the LRU bound (capacity signal)."""
+        return self.cache.evictions
 
     # -- stage 1: user-side partial evaluation ------------------------------
-    def _user_reps(self, req: ServeRequest) -> tuple[Mapping, bool, float]:
+    def _user_reps(self, req: ServeRequest
+                   ) -> tuple[Mapping[str, jax.Array], bool, float]:
         key = (req.user_id, req.feature_version)
-        if self.cache_user_reps and key in self._user_cache:
-            return self._user_cache[key], True, 0.0
-        t0 = time.perf_counter()
-        feeds = {k: v for k, v in req.user_feeds.items()
-                 if k in self._stage1_inputs}
-        reps = self._stage1(self.params, feeds)
-        jax.block_until_ready(reps)
-        self.stage1_calls += 1
-        ms = (time.perf_counter() - t0) * 1e3
         if self.cache_user_reps:
-            self._cache_put(key, reps)
+            reps = self.cache.get(key)
+            if reps is not None:
+                return reps, True, 0.0
+        if self.two_stage:
+            t0 = time.perf_counter()
+            feeds = {k: v for k, v in req.user_feeds.items()
+                     if k in self._stage1_inputs}
+            reps = self._stage1(self.params, feeds)
+            jax.block_until_ready(reps)
+            self.stage1_calls += 1
+            ms = (time.perf_counter() - t0) * 1e3
+        else:
+            # single-stage: the "representation" is the raw user feed dict —
+            # cached so repeat users skip host-side feed handling
+            reps, ms = dict(req.user_feeds), 0.0
+        if self.cache_user_reps:
+            self.cache.put(key, reps)
         return reps, False, ms
 
+    # -- scoring ------------------------------------------------------------
     def score(self, req: ServeRequest) -> ServeResult:
-        t0 = time.perf_counter()
-        stage1_ms = 0.0
-        if self.two_stage:
-            base_feeds, cache_hit, stage1_ms = self._user_reps(req)
-            step = self._stage2
-        else:
-            cache_hit = False
-            base_feeds = dict(req.user_feeds)
-            key = (req.user_id, req.feature_version)
-            if self.cache_user_reps and key in self._user_cache:
-                base_feeds = self._user_cache[key]
-                cache_hit = True
-            elif self.cache_user_reps:
-                self._cache_put(key, base_feeds)
-            step = self._step
+        """Score one request — the U=1 degenerate case of the coalesced path
+        (same executable family, hence bit-identical to batched scoring)."""
+        return self.score_coalesced([req])[0]
 
-        chunks = self._split(req.candidate_feeds)
-        scores, hedged = [], 0
-        for chunk, valid in chunks:
+    def score_coalesced(self, reqs: Sequence[ServeRequest]
+                        ) -> list[ServeResult]:
+        """Score several users' requests, coalescing candidate chunks that
+        share a power-of-two bucket into single cross-user stage-2 calls."""
+        t0 = time.perf_counter()
+        infos: list[_ReqInfo] = []
+        for ri, req in enumerate(reqs):
+            reps, hit, s1ms = self._user_reps(req)
+            infos.append(_ReqInfo(
+                reps=reps, hit=hit, stage1_ms=s1ms,
+                chunks=self._chunk(req.candidate_feeds),
+                slot_key=((req.user_id, req.feature_version)
+                          if self.cache_user_reps else ri)))
+
+        # greedy packing in arrival order: a pack holds chunks from as many
+        # requests as fit the row budget and the slot budget
+        items = [(ri, chunk, n) for ri, info in enumerate(infos)
+                 for chunk, n in info.chunks]
+        packs: list[tuple[list, list]] = []    # (items w/ slot idx, slot reps)
+        cur: list = []
+        cur_rows = 0
+        cur_slots: dict = {}                   # slot_key -> slot index
+        cur_reps: list = []                    # slot index -> reps
+        for ri, chunk, n in items:
+            key = infos[ri].slot_key
+            full = cur and (
+                cur_rows + n > self.max_batch
+                or (key not in cur_slots
+                    and len(cur_slots) >= self.max_users_per_batch))
+            if full:
+                packs.append((cur, cur_reps))
+                cur, cur_rows, cur_slots, cur_reps = [], 0, {}, []
+            if key not in cur_slots:
+                cur_slots[key] = len(cur_reps)
+                cur_reps.append(infos[ri].reps)
+            cur.append((ri, cur_slots[key], chunk, n))
+            cur_rows += n
+        if cur:
+            packs.append((cur, cur_reps))
+
+        per_req_scores: list[list[np.ndarray]] = [[] for _ in reqs]
+        per_req_packs = [0] * len(reqs)
+        per_req_hedged = [0] * len(reqs)
+        for pack_items, slot_reps in packs:
+            scores, hedged = self._run_pack(pack_items, slot_reps)
+            touched = set()
+            offset = 0
+            for ri, _, _, n in pack_items:
+                per_req_scores[ri].append(scores[offset:offset + n])
+                offset += n
+                touched.add(ri)
+            for ri in touched:
+                per_req_packs[ri] += 1
+                per_req_hedged[ri] += hedged
+
+        wall_ms = (time.perf_counter() - t0) * 1e3
+        return [ServeResult(
+            scores=np.concatenate(per_req_scores[ri], axis=0),
+            latency_ms=wall_ms, n_batches=per_req_packs[ri],
+            user_cache_hit=infos[ri].hit, hedged=per_req_hedged[ri],
+            stage1_ms=infos[ri].stage1_ms, coalesced=len(reqs) > 1)
+            for ri in range(len(reqs))]
+
+    def _run_pack(self, pack_items: list, slot_reps: list
+                  ) -> tuple[np.ndarray, int]:
+        """Execute one (possibly cross-user) stage-2 call.
+
+        ``pack_items`` is a list of (req idx, slot idx, cand chunk, n_valid);
+        ``slot_reps`` maps slot idx -> that user's rep dict (each entry a
+        batch-1 array). Returns (scores for the valid rows, hedged count).
+        """
+        total = sum(n for _, _, _, n in pack_items)
+        bucket = self._bucket(total)
+        pad = bucket - total
+
+        # rep table: one row-block per slot, padded to a pow2 slot count so
+        # the executable family stays small
+        n_slots = len(slot_reps)
+        u_pad = _next_pow2(n_slots)
+        if n_slots == 1 and u_pad == 1:
+            table = dict(slot_reps[0])
+        else:
+            padded = slot_reps + [slot_reps[0]] * (u_pad - n_slots)
+            table = {k: jnp.concatenate([r[k] for r in padded], axis=0)
+                     for k in slot_reps[0]}
+
+        uidx = np.zeros((bucket,), np.int32)   # padding rows point at slot 0
+        offset = 0
+        for _, slot, _, n in pack_items:
+            uidx[offset:offset + n] = slot
+            offset += n
+
+        cand = {}
+        last_chunk = pack_items[-1][2]
+        for k in last_chunk:
+            xs = [chunk[k] for _, _, chunk, _ in pack_items]
+            if pad:
+                tail = last_chunk[k][-1:]      # repeat the final valid row
+                xs.append(jnp.broadcast_to(tail, (pad,) + tail.shape[1:]))
+            cand[k] = jnp.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
+
+        # first call at a new (rep-table, bucket) signature compiles — that
+        # is not a straggler, so hedging would only duplicate the compile
+        first_shape = (u_pad, bucket) not in self._batch_shapes
+        self._batch_shapes.add((u_pad, bucket))
+        self.stage2_calls += 1
+        if n_slots > 1:
+            self.coalesced_calls += 1
+        if self._hedged is not None and not first_shape:
+            out, outcome = self._hedged.run(
+                self.params, table, jnp.asarray(uidx), cand)
+            hedged = int(outcome.hedged)
+        else:
             tb = time.perf_counter()
-            out = step(self.params, {**base_feeds, **chunk})
-            s = np.asarray(jnp.concatenate(
-                [out[o] for o in self.outputs], axis=-1))[:valid]
-            lat_ms = (time.perf_counter() - tb) * 1e3
-            if self.hedge.should_hedge(lat_ms):
-                hedged += 1  # single-host stand-in: record the decision
-            self.hedge.observe(lat_ms)
-            scores.append(s)
-        return ServeResult(
-            scores=np.concatenate(scores, axis=0),
-            latency_ms=(time.perf_counter() - t0) * 1e3,
-            n_batches=len(chunks), user_cache_hit=cache_hit, hedged=hedged,
-            stage1_ms=stage1_ms)
+            out = self._dispatch(self.params, table, jnp.asarray(uidx), cand)
+            if not first_shape:   # compile latency would poison the window
+                self.hedge_policy.observe((time.perf_counter() - tb) * 1e3)
+            hedged = 0
+        scores = np.asarray(jnp.concatenate(
+            [out[o] for o in self.outputs], axis=-1))[:total]
+        return scores, hedged
+
+    def _dispatch(self, params, table, uidx, cand):
+        out = self._stage2(params, table, uidx, cand)
+        jax.block_until_ready(out)
+        return out
 
     def invalidate_user(self, user_id: int) -> None:
-        for key in [k for k in self._user_cache if k[0] == user_id]:
-            self._user_cache.pop(key, None)
+        self.cache.invalidate_user(user_id)
+
+    def close(self) -> None:
+        if self._hedged is not None:
+            self._hedged.close()

@@ -1,0 +1,112 @@
+"""Straggler mitigation with REAL duplicate execution (tail-at-scale hedging).
+
+Two layers:
+
+* ``HedgePolicy`` — the *decision*: a rolling-quantile latency tracker whose
+  ``hedge_deadline_ms`` says how long a chunk may run before a duplicate is
+  worth launching (p99 of the recent window, floored at ``min_hedge_ms``).
+* ``HedgedRunner`` — the *execution*: runs the chunk on a worker thread,
+  waits out the policy deadline, and if the primary is still straggling
+  launches a duplicate of the same computation; the **first completed
+  result wins** and the loser is cancelled (best effort: a not-yet-started
+  future is cancelled outright; an in-flight XLA dispatch cannot be
+  interrupted, so it is abandoned — its result is discarded and never
+  blocks the caller).
+
+The seed's ``HedgePolicy`` lived in ``repro.ft.failures`` and the engine
+merely *recorded* the decision. The runner makes it real: both executions
+dispatch the same jitted stage-2 executable (JAX dispatch is thread-safe;
+results are deterministic, so first-wins cannot change scores).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor, wait
+
+
+class HedgePolicy:
+    """Rolling-quantile hedging decision (tail-at-scale)."""
+
+    def __init__(self, quantile: float = 0.99, window: int = 512,
+                 min_hedge_ms: float = 5.0):
+        self.q = quantile
+        self.lat = deque(maxlen=window)
+        self.min_hedge_ms = min_hedge_ms
+
+    def observe(self, latency_ms: float) -> None:
+        self.lat.append(latency_ms)
+
+    def hedge_deadline_ms(self) -> float:
+        if len(self.lat) < 16:
+            return self.min_hedge_ms * 10
+        xs = sorted(self.lat)
+        idx = min(len(xs) - 1, int(self.q * len(xs)))
+        return max(xs[idx], self.min_hedge_ms)
+
+    def should_hedge(self, elapsed_ms: float) -> bool:
+        return elapsed_ms >= self.hedge_deadline_ms()
+
+
+@dataclasses.dataclass
+class HedgeOutcome:
+    hedged: bool                  # a duplicate was actually launched
+    winner: str                   # "primary" | "hedge"
+    latency_ms: float             # first-result latency seen by the caller
+    deadline_ms: float            # policy deadline that gated the duplicate
+
+
+class HedgedRunner:
+    """Run ``fn(*args)`` with policy-gated duplicate execution.
+
+    ``fn`` must be deterministic and safe to invoke concurrently with
+    itself (a jitted JAX call qualifies). The runner owns a small thread
+    pool with headroom beyond the 2 slots a single call needs: an abandoned
+    loser keeps its worker busy until its dispatch finishes, and with only
+    2 workers a burst of consecutive stragglers would queue every new
+    primary/duplicate behind zombies — silently disabling hedging exactly
+    when it matters.
+    """
+
+    def __init__(self, fn, policy: HedgePolicy | None = None,
+                 max_workers: int = 8):
+        self.fn = fn
+        self.policy = policy or HedgePolicy()
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="hedge")
+        self.hedges_launched = 0
+        self.hedge_wins = 0
+
+    def run(self, *args) -> tuple[object, HedgeOutcome]:
+        deadline_ms = self.policy.hedge_deadline_ms()
+        t0 = time.perf_counter()
+        primary: Future = self._pool.submit(self.fn, *args)
+        done, _ = wait({primary}, timeout=deadline_ms / 1e3,
+                       return_when=FIRST_COMPLETED)
+        if done:
+            result, hedged, winner = primary.result(), False, "primary"
+        else:
+            # primary is straggling: duplicate the chunk, first result wins
+            self.hedges_launched += 1
+            backup: Future = self._pool.submit(self.fn, *args)
+            done, not_done = wait({primary, backup},
+                                  return_when=FIRST_COMPLETED)
+            # both may have completed between the deadline and the wait;
+            # prefer the primary then (identical results either way)
+            first = primary if primary in done else backup
+            winner = "primary" if first is primary else "hedge"
+            if winner == "hedge":
+                self.hedge_wins += 1
+            for f in not_done:
+                f.cancel()        # not-started duplicates die here; an
+            result = first.result()  # in-flight loser is abandoned, not awaited
+            hedged = True
+        latency_ms = (time.perf_counter() - t0) * 1e3
+        self.policy.observe(latency_ms)
+        return result, HedgeOutcome(hedged=hedged, winner=winner,
+                                    latency_ms=latency_ms,
+                                    deadline_ms=deadline_ms)
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)

@@ -4,7 +4,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+# pre-existing seed situation: hypothesis is not installed in the tier-1
+# container — skip the whole module there (CI runs it in a dedicated
+# non-blocking step that installs hypothesis)
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.models.transformer import flash_attention
 

@@ -1,0 +1,397 @@
+"""The async coalescing serve runtime: cross-user stage-2 batching
+(bit-identical to per-request scoring), bounded LRU user-rep cache, real
+hedged execution, weight pre-concatenation, and candidate-axis sharding.
+"""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data.features import make_recsys_feeds
+from repro.graph.executor import init_graph_params
+from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
+from repro.models.recsys import build_din
+from repro.serve import (CoalescingBatcher, HedgedRunner, HedgePolicy,
+                         ServeRequest, ServingEngine)
+from repro.serve.cache import UserRepCache
+
+
+@pytest.fixture(scope="module")
+def paper():
+    graph, _ = build_paper_ranking_model(PaperRankingConfig().scaled(0.05))
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    return graph, params, user_in
+
+
+def _request(graph, user_in, uid, n, seed, version=0):
+    feeds = make_recsys_feeds(graph, n, jax.random.PRNGKey(seed))
+    return ServeRequest(
+        user_id=uid,
+        user_feeds={k: v for k, v in feeds.items() if k in user_in},
+        candidate_feeds={k: v for k, v in feeds.items() if k not in user_in},
+        feature_version=version)
+
+
+def _assert_bit_identical(per, co):
+    for p, c in zip(per, co):
+        assert p.scores.shape == c.scores.shape
+        assert np.array_equal(p.scores, c.scores), (
+            f"coalesced diverged: max diff "
+            f"{np.abs(p.scores - c.scores).max()}")
+
+
+class TestUserRepCache:
+    def test_lru_bound_and_evictions(self):
+        c = UserRepCache(max_users=2)
+        c.put((1, 0), {"x": 1})
+        c.put((2, 0), {"x": 2})
+        c.get((1, 0))                      # 1 is now most recent
+        c.put((3, 0), {"x": 3})            # evicts LRU user 2
+        assert c.evictions == 1
+        assert (2, 0) not in c and (1, 0) in c and (3, 0) in c
+
+    def test_version_supersede_not_counted_as_eviction(self):
+        c = UserRepCache(max_users=8)
+        c.put((1, 0), {"x": 1})
+        c.put((1, 1), {"x": 2})
+        assert len(c) == 1 and (1, 1) in c
+        assert c.evictions == 0            # supersede, not capacity pressure
+
+    def test_invalidate_user(self):
+        c = UserRepCache()
+        c.put((1, 0), {})
+        c.put((2, 0), {})
+        assert c.invalidate_user(1) == 1
+        assert (1, 0) not in c and (2, 0) in c
+
+    def test_unbounded_by_default(self):
+        c = UserRepCache()
+        for u in range(100):
+            c.put((u, 0), {})
+        assert len(c) == 100 and c.evictions == 0
+
+    def test_engine_surfaces_evictions(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=32,
+                            max_cached_users=2, hedging=False)
+        for uid in range(4):
+            eng.score(_request(graph, user_in, uid, 9, seed=uid))
+        assert len(eng.cache) == 2
+        assert eng.cache_evictions == 2
+        # evicted user recomputes stage 1; resident user hits
+        assert not eng.score(
+            _request(graph, user_in, 0, 9, seed=0)).user_cache_hit
+        assert eng.score(
+            _request(graph, user_in, 3, 9, seed=3)).user_cache_hit
+
+
+class TestCoalescedLossless:
+    """Scores from the batcher (many users coalesced into one bucket) must
+    match per-request ``score()`` EXACTLY — ragged tails, chunked pools, and
+    cache hits/misses mixed in one batch."""
+
+    @pytest.mark.parametrize("mode", ["vani", "uoi", "mari"])
+    def test_modes_bit_identical(self, paper, mode):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode=mode, max_batch=128,
+                            hedging=False)
+        reqs = [_request(graph, user_in, 0, 23, seed=1),
+                _request(graph, user_in, 1, 40, seed=2),
+                _request(graph, user_in, 2, 7, seed=3),
+                _request(graph, user_in, 0, 31, seed=4),   # repeat user
+                _request(graph, user_in, 3, 64, seed=5)]
+        per = [eng.score(r) for r in reqs]
+        # max_coalesce == len(reqs) closes the group deterministically once
+        # all requests are queued (no reliance on linger timing under load)
+        with CoalescingBatcher(eng, linger_ms=2000.0,
+                               max_coalesce=len(reqs)) as b:
+            co = b.score_many(reqs)
+        _assert_bit_identical(per, co)
+        assert eng.coalesced_calls >= 1
+        assert b.coalesced_requests == len(reqs)
+
+    def test_mixed_hits_and_misses_one_batch(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=256,
+                            hedging=False)
+        warm = _request(graph, user_in, 7, 20, seed=7)
+        ref_warm = eng.score(warm)                  # user 7 now cached
+        fresh = [_request(graph, user_in, 8, 33, seed=8),
+                 _request(graph, user_in, 9, 12, seed=9)]
+        ref_fresh = [ServingEngine(graph, params, mode="mari", max_batch=256,
+                                   hedging=False).score(r) for r in fresh]
+        co = eng.score_coalesced([warm] + fresh)
+        assert co[0].user_cache_hit and not co[1].user_cache_hit
+        _assert_bit_identical([ref_warm] + ref_fresh, co)
+        assert all(r.coalesced for r in co)
+
+    def test_pool_larger_than_max_batch_spills_chunks(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            min_bucket=16, hedging=False)
+        reqs = [_request(graph, user_in, 0, 150, seed=1),   # 64+64+22
+                _request(graph, user_in, 1, 30, seed=2)]    # tail shares
+        per = [eng.score(r) for r in reqs]
+        co = eng.score_coalesced(reqs)
+        _assert_bit_identical(per, co)
+        # the 22-row tail and the 30-row pool coalesce into one 64 bucket
+        assert co[0].n_batches == 3 and co[1].n_batches == 1
+        assert eng.coalesced_calls >= 1
+
+    def test_din_reparam_attention_coalesced(self):
+        graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
+                             mlp=(24, 12), item_vocab=128)
+        params = init_graph_params(graph, jax.random.PRNGKey(0))
+        user_in = {n.name for n in graph.input_nodes()
+                   if n.attrs.get("domain") == "user"}
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            min_bucket=8, reparam_attention=True,
+                            hedging=False)
+        reqs = [_request(graph, user_in, u, n, seed=u + 1)
+                for u, n in ((0, 11), (1, 17), (2, 5))]
+        per = [eng.score(r) for r in reqs]
+        co = eng.score_coalesced(reqs)
+        _assert_bit_identical(per, co)
+
+    def test_single_stage_fallback_coalesced(self):
+        """A graph that cannot split (domain-less input in the user closure)
+        serves single-stage; coalescing gathers raw user feeds row-wise and
+        must still be exact."""
+        from repro.graph.ir import GraphBuilder
+        b = GraphBuilder()
+        u = b.input("u", (6,), "user")
+        ctx = b.input("ctx", (4,), None)
+        i = b.input("i", (5,), "item")
+        uc = b.concat("uc", [u, ctx])
+        c = b.concat("c", [uc, i])
+        f = b.dense("f", c, 8, activation="relu")
+        out = b.dense("out", f, 1)
+        b.output(out)
+        graph = b.graph
+        params = init_graph_params(graph, jax.random.PRNGKey(0))
+        eng = ServingEngine(graph, params, mode="mari", max_batch=32,
+                            min_bucket=8, hedging=False)
+        assert not eng.two_stage
+        ks = jax.random.split(jax.random.PRNGKey(1), 12)
+        reqs = []
+        for uid, n in ((0, 5), (1, 9), (2, 3)):
+            reqs.append(ServeRequest(
+                uid,
+                {"u": jax.random.normal(ks[2 * uid], (1, 6)),
+                 "ctx": jax.random.normal(ks[2 * uid + 1], (1, 4))},
+                {"i": jax.random.normal(ks[6 + uid], (n, 5))}))
+        per = [eng.score(r) for r in reqs]
+        co = eng.score_coalesced(reqs)
+        _assert_bit_identical(per, co)
+
+    def test_compiled_shape_family_bounded(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=128,
+                            hedging=False)
+        for n in (10, 50, 100):
+            eng.score(_request(graph, user_in, 0, n, seed=n))
+        eng.score_coalesced([_request(graph, user_in, u, 20, seed=u)
+                             for u in range(3)])
+        # U=1 (per-request) and U_pad=4 (3 users) at one bucket each
+        assert eng.stage2_compilations <= 2
+
+
+class TestPrecatWeights:
+    """Grouped-weight pre-concat at engine build must not change a single
+    bit — the streamed operands are identical, only the concat moves out of
+    the per-call path."""
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    @pytest.mark.parametrize("layout", ["group_by_domain", "fragment"])
+    def test_bit_identical(self, paper, layout, use_pallas):
+        graph, params, user_in = paper
+        kw = {layout: True}
+        engines = [ServingEngine(graph, params, mode="mari", max_batch=64,
+                                 precat_weights=p, use_pallas=use_pallas,
+                                 hedging=False, **kw) for p in (False, True)]
+        reqs = [_request(graph, user_in, u, n, seed=u + 1)
+                for u, n in ((0, 21), (1, 40))]
+        r_off = engines[0].score_coalesced(reqs)
+        r_on = engines[1].score_coalesced(reqs)
+        _assert_bit_identical(r_off, r_on)
+
+    def test_w_cat_present_on_stage2_nodes(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            group_by_domain=True, hedging=False)
+        cats = [name for name, p in eng.params.items()
+                if isinstance(p, dict) and "w_cat" in p]
+        assert cats, "expected pre-concatenated weights on rewritten nodes"
+        for name in cats:
+            node = eng.split.stage2.nodes[name]
+            ws = [eng.params[name][f"w_{lab}"]
+                  for lab, _ in node.attrs["groups"] if lab != "user"]
+            assert eng.params[name]["w_cat"].shape[0] == sum(
+                w.shape[0] for w in ws)
+
+
+class TestHedging:
+    def test_runner_duplicates_straggler_first_result_wins(self):
+        calls = []
+        lock = threading.Lock()
+
+        def flaky(x):
+            with lock:
+                calls.append(x)
+                first = len(calls) == 1
+            if first:
+                time.sleep(0.25)           # primary straggles
+            return x * 2
+
+        policy = HedgePolicy(min_hedge_ms=20.0)
+        runner = HedgedRunner(flaky, policy)
+        try:
+            # prime the window so the deadline is the 20ms floor
+            for _ in range(20):
+                policy.observe(1.0)
+            result, outcome = runner.run(21)
+            assert result == 42
+            assert outcome.hedged and outcome.winner == "hedge"
+            assert runner.hedges_launched == 1 and runner.hedge_wins == 1
+            assert len(calls) == 2         # duplicate actually executed
+        finally:
+            runner.close()
+
+    def test_fast_primary_not_hedged(self):
+        runner = HedgedRunner(lambda x: x + 1, HedgePolicy(min_hedge_ms=500.0))
+        try:
+            result, outcome = runner.run(1)
+            assert result == 2 and not outcome.hedged
+            assert outcome.winner == "primary"
+        finally:
+            runner.close()
+
+    def test_engine_hedges_and_scores_stay_exact(self, paper):
+        graph, params, user_in = paper
+        # a primed near-zero deadline forces a duplicate on every warm call
+        policy = HedgePolicy(min_hedge_ms=1e-4)
+        for _ in range(32):
+            policy.observe(1e-4)
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=True, hedge_policy=policy)
+        ref = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=False)
+        req = _request(graph, user_in, 0, 30, seed=1)
+        eng.score(req)                     # compile (never hedged)
+        ref_scores = ref.score(req).scores
+        # a single attempt can legitimately skip the hedge (the primary may
+        # finish before the caller re-checks under scheduler stalls), so
+        # assert over a handful of warm calls
+        hedged = 0
+        for _ in range(5):
+            r = eng.score(req)
+            hedged += r.hedged
+            np.testing.assert_array_equal(r.scores, ref_scores)
+        assert hedged >= 1
+        eng.close()
+
+
+class TestShardedStage2:
+    def test_single_device_bit_identical(self, paper):
+        graph, params, user_in = paper
+        ref = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=False)
+        sh = ServingEngine(graph, params, mode="mari", max_batch=64,
+                           shard_candidates=True, hedging=False)
+        reqs = [_request(graph, user_in, u, n, seed=u + 1)
+                for u, n in ((0, 21), (1, 40))]
+        _assert_bit_identical(ref.score_coalesced(reqs),
+                              sh.score_coalesced(reqs))
+
+    def test_multi_device_subprocess(self):
+        """Real candidate-axis sharding over 8 forced host devices: sharded
+        coalesced scores must match the unsharded engine."""
+        script = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax, numpy as np
+assert len(jax.devices()) == 8
+from repro.data.features import make_recsys_feeds
+from repro.graph.executor import init_graph_params
+from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
+from repro.serve import ServeRequest, ServingEngine
+
+graph, _ = build_paper_ranking_model(PaperRankingConfig().scaled(0.03))
+params = init_graph_params(graph, jax.random.PRNGKey(0))
+user_in = {n.name for n in graph.input_nodes()
+           if n.attrs.get("domain") == "user"}
+def req(uid, n, seed):
+    feeds = make_recsys_feeds(graph, n, jax.random.PRNGKey(seed))
+    return ServeRequest(uid, {k: v for k, v in feeds.items() if k in user_in},
+                        {k: v for k, v in feeds.items() if k not in user_in})
+reqs = [req(0, 21, 1), req(1, 40, 2), req(2, 9, 3)]
+ref = ServingEngine(graph, params, mode="mari", max_batch=64, min_bucket=16,
+                    hedging=False)
+sh = ServingEngine(graph, params, mode="mari", max_batch=64, min_bucket=16,
+                   shard_candidates=True, hedging=False)
+assert sh.mesh.devices.size == 8, sh.mesh
+a = ref.score_coalesced(reqs)
+b = sh.score_coalesced(reqs)
+for x, y in zip(a, b):
+    np.testing.assert_allclose(x.scores, y.scores, rtol=1e-6, atol=1e-6)
+print("SHARDED-OK")
+"""
+        env = dict(os.environ)
+        src = os.path.join(os.path.dirname(__file__), "..", "src")
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        p = subprocess.run([sys.executable, "-c", script], env=env,
+                           capture_output=True, text=True, timeout=600)
+        assert p.returncode == 0, p.stderr[-3000:]
+        assert "SHARDED-OK" in p.stdout
+
+
+class TestBatcherRuntime:
+    def test_burst_coalesces_into_few_batches(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=256,
+                            hedging=False)
+        reqs = [_request(graph, user_in, u, 20, seed=u) for u in range(6)]
+        eng.score(reqs[0])                       # compile before timing paths
+        # group closes at max_coalesce, not on linger expiry — deterministic
+        # even when the submitting thread stalls under suite load
+        with CoalescingBatcher(eng, linger_ms=2000.0, max_coalesce=3) as b:
+            results = b.score_many(reqs)
+        assert all(r.scores.shape[0] == 20 for r in results)
+        assert b.batches < len(reqs)             # actually coalesced
+        assert b.requests == len(reqs)
+
+    def test_submit_returns_future(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=False)
+        with CoalescingBatcher(eng, linger_ms=1.0) as b:
+            fut = b.submit(_request(graph, user_in, 0, 10, seed=1))
+            res = fut.result(timeout=120)
+        assert res.scores.shape[0] == 10
+
+    def test_error_propagates_to_waiters(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=False)
+        bad = ServeRequest(0, {}, {"item_feats": np.zeros((4, 3))})
+        with CoalescingBatcher(eng, linger_ms=1.0) as b:
+            fut = b.submit(bad)
+            with pytest.raises(Exception):
+                fut.result(timeout=120)
+
+    def test_closed_batcher_rejects(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=64,
+                            hedging=False)
+        b = CoalescingBatcher(eng, auto_start=False)
+        with pytest.raises(RuntimeError):
+            b.submit(_request(graph, user_in, 0, 10, seed=1))

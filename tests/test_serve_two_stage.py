@@ -59,6 +59,22 @@ class TestSplitStructure:
             assert node2.attrs["precomputed_user"]
             assert not any(lab == "user" for lab, _ in node2.attrs["groups"])
 
+    def test_boundary_specs_match_stage1_outputs(self):
+        """boundary_specs names every stage-2 user-side input and carries
+        the per-example shape the coalescing runtime stacks rep tables by."""
+        graph, params, feeds, _ = _paper_setup()
+        mg, mp, _ = apply_mari(graph, params)
+        split = split_two_stage(mg)
+        assert set(split.boundary_specs) == set(split.stage1.outputs)
+        s2_user = {n.name for n in split.stage2.input_nodes()
+                   if n.attrs.get("domain") == "user"}
+        assert s2_user <= set(split.boundary_specs)
+        s1_in = {n.name for n in split.stage1.input_nodes()}
+        reps = Executor(split.stage1, "uoi").run(
+            mp, {k: v for k, v in feeds.items() if k in s1_in})
+        for name, spec in split.boundary_specs.items():
+            assert tuple(reps[name].shape[1:]) == tuple(spec), name
+
     def test_attention_one_shot_tensors_peeled(self):
         graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
                              mlp=(24, 12), item_vocab=128)
@@ -133,8 +149,8 @@ class TestEngineCaching:
         eng = ServingEngine(graph, params, mode="mari", max_batch=16)
         for v in range(4):
             eng.score(_request(feeds, user_in, user_id=5, version=v))
-        assert len(eng._user_cache) == 1
-        assert (5, 3) in eng._user_cache
+        assert len(eng.cache) == 1
+        assert (5, 3) in eng.cache
 
     def test_invalidate_user_drops_all_versions(self):
         graph, params, feeds, user_in = _paper_setup()
