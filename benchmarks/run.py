@@ -274,6 +274,67 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
 
 
 # ---------------------------------------------------------------------------
+# Distributed serving: shards-vs-qps (single- and multi-process stage 2)
+# ---------------------------------------------------------------------------
+
+def bench_dist(shards=(1, 2, 4), pool: int = 2000, users: int = 4,
+               passes: int = 5, scale: float = 0.05, modes: str = "mari",
+               two_process: bool = True):
+    """Candidate-axis sharded stage 2 at increasing shard counts.
+
+    Each row runs in a subprocess (``repro.dist.runner``) so every shard
+    count gets its own forced host-device world; the final row exercises
+    the REAL multi-process path (2 ``jax.distributed`` workers). On one
+    physical CPU the forced devices share cores, so qps-vs-shards mostly
+    reports sharding overhead, not speedup — the row the trajectory
+    tracks is that overhead staying flat. Scores per run are verified
+    bit-identical against the process-local engine (--verify).
+    """
+    import os
+    import subprocess
+    import sys
+
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+
+    def run(n_proc: int, dev_per_proc: int) -> list[dict]:
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "repro.dist.runner",
+               "--spawn", str(n_proc),
+               "--devices-per-process", str(dev_per_proc),
+               "--bench", "--verify", "--modes", modes,
+               "--pool", str(pool), "--users", str(users),
+               "--passes", str(passes), "--scale", str(scale),
+               "--max-batch", "1024", "--min-bucket", "128"]
+        p = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                           timeout=900)
+        if p.returncode != 0:
+            raise RuntimeError(f"dist bench worker failed:\n{p.stderr[-2000:]}")
+        return [json.loads(line) for line in p.stdout.strip().splitlines()
+                if line.startswith("{") and "qps" in line]
+
+    records = []
+    for n in shards:
+        for r in run(1, n):
+            records.append(r)
+            _row(f"dist/{r['mode']}/shards={r['shards']}", 1e6 / r["qps"],
+                 f"procs=1;pool={r['pool']};users={r['users']};"
+                 f"qps={r['qps']};bit_identical={r.get('bit_identical')}")
+    if two_process:
+        nproc_dev = max(max(shards) // 2, 1)
+        for r in run(2, nproc_dev):
+            records.append(r)
+            _row(f"dist/{r['mode']}/shards={r['shards']}/procs=2",
+                 1e6 / r["qps"],
+                 f"procs=2;pool={r['pool']};users={r['users']};"
+                 f"qps={r['qps']};bit_identical={r.get('bit_identical')}")
+    _JSON_EXTRA["dist"] = {"config": "paper_ranking", "scale": scale,
+                           "pool": pool, "users": users, "passes": passes,
+                           "records": records}
+
+
+# ---------------------------------------------------------------------------
 # Appendix B.1: UOI vs VanI cross-attention (K/V projected once vs B times)
 # ---------------------------------------------------------------------------
 
@@ -305,6 +366,7 @@ BENCHES = {
     "table2": bench_table2,
     "table3": bench_table3,
     "serve": bench_serve,
+    "dist": bench_dist,
     "uoi": bench_uoi_attention,
 }
 
@@ -331,6 +393,10 @@ def main() -> None:
         bench_table1()
     if args.bench in ("serve", "all"):
         bench_serve(args.serve_scale)
+    if args.bench == "dist":
+        # not in "all": forced-device subprocess worlds are heavyweight and
+        # CI runs this as its own artifact step (BENCH_dist.json)
+        bench_dist()
     if args.bench in ("uoi", "all"):
         bench_uoi_attention()
     if args.json:

@@ -92,6 +92,19 @@ def round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (1 for n <= 1)."""
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def prev_pow2(n: int) -> int:
+    """Largest power of two <= n (requires n >= 1)."""
+    return 1 << (n.bit_length() - 1)
+
+
 def cdiv(a: int, b: int) -> int:
     return (a + b - 1) // b
 

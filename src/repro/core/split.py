@@ -68,6 +68,16 @@ class TwoStageSplit:
                 f"{len(self.boundary)} boundary values; "
                 f"stage2 {len(self.stage2.nodes)} nodes")
 
+    def boundary_pspecs(self) -> dict:
+        """Rank-matched replicated PartitionSpecs for the stacked (U, ...)
+        rep tables — user representations replicate across candidate
+        shards (every shard scores rows for every user), which is the
+        stage-2 sharding contract of ``repro.dist.sharding
+        .candidate_pspecs``. Rank = 1 (table dim) + per-example rank."""
+        from jax.sharding import PartitionSpec as P
+        return {name: P(*([None] * (1 + len(shape))))
+                for name, shape in self.boundary_specs.items()}
+
 
 def _split_mari_dense(n: Node, pre: set[str]) -> tuple[Node, list[Node]]:
     """Peel the user-side product of a ``mari_dense`` into a stage-1 partial.

@@ -1,0 +1,24 @@
+"""repro.dist — distributed execution subsystem.
+
+Four layers, smallest first:
+
+* ``policy``   — thread-local sharding policy the model code consults
+  (``policy.use(...)`` / ``policy.get`` / ``policy.constrain``) so model
+  functions stay mesh-agnostic;
+* ``sharding`` — PartitionSpec rule sets for every model family
+  (LM Megatron-style TP + ZeRO-1, recsys big-table sharding, GNN
+  replication) plus the stage-2 candidate-axis serving specs;
+* ``compress`` — int8 gradient/score compression (``quantize_int8``,
+  ``compressed_psum`` with error feedback);
+* ``topology`` / ``runner`` — multi-process serving: ``jax.distributed``
+  process topology, the collective-aware bucket planner, and the SPMD
+  serving runner that drives ``ServingEngine`` across workers.
+"""
+from repro.dist import policy  # noqa: F401
+from repro.dist.compress import (compressed_psum, dequantize_int8,  # noqa: F401
+                                 quantize_int8)
+from repro.dist.sharding import (candidate_pspecs, dp_axes,  # noqa: F401
+                                 lm_param_pspecs, named, recsys_param_pspecs,
+                                 zero1_pspecs)
+from repro.dist.topology import (Topology, bucket_for,  # noqa: F401
+                                 candidate_mesh, plan_buckets)

@@ -1,0 +1,64 @@
+"""Thread-local sharding policy.
+
+Model code (``repro.models.transformer``) stays mesh-agnostic: instead of
+threading shardings through every function signature, the launch layer
+activates a policy for the duration of a trace::
+
+    with policy.use(moe_shard_axes=("data",), residual=NamedSharding(...)):
+        jitted.lower(*args)
+
+and the model consults it at trace time via ``policy.get`` (a value or
+None) or ``policy.constrain`` (``with_sharding_constraint`` when the key is
+set, identity otherwise). Policies nest — inner ``use`` blocks shadow outer
+keys — and are thread-local, so concurrent traces (the serve batcher's
+worker thread vs. the main thread) cannot leak shardings into each other.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterator
+
+_local = threading.local()
+
+
+def _stack() -> list[dict]:
+    st = getattr(_local, "stack", None)
+    if st is None:
+        st = _local.stack = []
+    return st
+
+
+@contextlib.contextmanager
+def use(**kv: Any) -> Iterator[None]:
+    """Activate policy entries for the enclosed trace (nestable)."""
+    _stack().append(kv)
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def get(key: str, default: Any = None) -> Any:
+    """Innermost active value for ``key``, or ``default``."""
+    for frame in reversed(_stack()):
+        if key in frame:
+            return frame[key]
+    return default
+
+
+def constrain(x, key: str):
+    """``with_sharding_constraint(x, policy[key])`` if set, else ``x``."""
+    sh = get(key)
+    if sh is None:
+        return x
+    import jax
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def active() -> dict:
+    """Flattened view of the current policy (inner frames win)."""
+    out: dict = {}
+    for frame in _stack():
+        out.update(frame)
+    return out

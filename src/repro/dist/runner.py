@@ -1,0 +1,246 @@
+"""Multi-process SPMD serving runner.
+
+Every worker process runs the IDENTICAL program: build the paper's ranking
+graph from a fixed seed, construct a ``ServingEngine`` with
+``shard_candidates=True`` (the 'cand' mesh spans all processes' devices
+after ``jax.distributed`` initializes), and drive the same request
+sequence in lockstep. Stage 2's inputs are globalized onto the mesh —
+candidate rows and the per-row user index sharded, params and rep tables
+replicated — so each worker's devices score their candidate slice and the
+closing all-gather (the step's one collective) hands every host the full
+score vector.
+
+Correctness contract (the subprocess test in ``tests/test_dist.py``):
+sharded fp32 scores are **bit-identical** to a process-local single-device
+``ServingEngine`` — candidate-axis sharding only partitions row-parallel
+work, it reassociates nothing.
+
+Usage (spawner re-execs itself as the workers)::
+
+  python -m repro.dist.runner --spawn 2 --devices-per-process 2 --verify
+  python -m repro.dist.runner --spawn 1 --devices-per-process 4 --bench
+
+Each worker prints one JSON record per mode; the spawner re-emits worker
+0's stdout and fails if any worker fails.
+"""
+from __future__ import annotations
+
+import os
+
+# The forced host-device count must be locked in before any jax import
+# (the spawner sets REPRO_HOST_DEVICES in each worker's environment).
+if os.environ.get("REPRO_HOST_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count="
+        + os.environ["REPRO_HOST_DEVICES"])
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import argparse
+import json
+import socket
+import subprocess
+import sys
+import time
+
+MODES = ("vani", "uoi", "mari")
+
+
+def _free_port() -> int:
+    with socket.socket() as s:
+        s.bind(("localhost", 0))
+        return s.getsockname()[1]
+
+
+def build_problem(scale: float, pool: int, users: int):
+    """Deterministic (graph, params, requests) — identical in every
+    worker, so the SPMD dispatch sequence matches without coordination."""
+    import jax
+
+    from repro.data.features import make_recsys_feeds
+    from repro.graph.executor import init_graph_params
+    from repro.models.ranking import (PaperRankingConfig,
+                                      build_paper_ranking_model)
+    from repro.serve.engine import ServeRequest
+
+    graph, _ = build_paper_ranking_model(PaperRankingConfig().scaled(scale))
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    reqs = []
+    for u in range(users):
+        # ragged pools on purpose: exercises the shard-aligned bucketing
+        n = max(1, pool // users + 7 * u)
+        feeds = make_recsys_feeds(graph, n, jax.random.PRNGKey(u + 1))
+        reqs.append(ServeRequest(
+            user_id=u,
+            user_feeds={k: v for k, v in feeds.items() if k in user_in},
+            candidate_feeds={k: v for k, v in feeds.items()
+                             if k not in user_in}))
+    return graph, params, reqs
+
+
+def run_worker(args) -> int:
+    from repro.dist.topology import Topology
+
+    topo = Topology.from_env().initialize()
+    import jax
+    import numpy as np
+
+    from repro.serve.engine import ServingEngine
+
+    graph, params, reqs = build_problem(args.scale, args.pool, args.users)
+    pool_rows = sum(next(iter(r.candidate_feeds.values())).shape[0]
+                    for r in reqs)
+    records = []
+    for mode in args.modes.split(","):
+        ref = ref_scores = None
+        if args.verify:
+            # process-local reference: plain single-device engine
+            # (identical inputs in every worker -> identical references)
+            ref = ServingEngine(graph, params, mode=mode,
+                                max_batch=args.max_batch,
+                                min_bucket=args.min_bucket, hedging=False)
+            ref_scores = [r.scores for r in ref.score_coalesced(reqs)]
+
+        eng = ServingEngine(graph, params, mode=mode,
+                            max_batch=args.max_batch,
+                            min_bucket=args.min_bucket,
+                            shard_candidates=True,
+                            compress_scores=args.compress_scores,
+                            hedging=False)
+        res = eng.score_coalesced(reqs)         # compile + verify pass
+        rec = {"mode": mode, "processes": topo.num_processes,
+               "shards": int(eng.mesh.devices.size),
+               "devices_per_process": len(jax.local_devices()),
+               "pool": pool_rows,
+               "users": len(reqs),
+               "compress_scores": bool(args.compress_scores)}
+        if args.verify:
+            if args.compress_scores:
+                # int8 wire: exact identity is forfeit by construction;
+                # per-element error <= that shard's scale/2
+                tol = max(float(np.abs(s).max()) for s in ref_scores) \
+                    / 127.0 / 2.0 + 1e-6
+                ok = all(np.allclose(a.scores, b, atol=tol)
+                         for a, b in zip(res, ref_scores))
+                rec["within_int8_bound"] = bool(ok)
+            else:
+                ok = all(np.array_equal(a.scores, b)
+                         for a, b in zip(res, ref_scores))
+                rec["bit_identical"] = bool(ok)
+            if not ok:
+                print(json.dumps(rec), flush=True)
+                print(f"[runner] VERIFY FAILED mode={mode}", file=sys.stderr)
+                return 1
+        if args.bench:
+            eng.score_coalesced(reqs)           # warm every shape
+            walls = []
+            for _ in range(args.passes):
+                t0 = time.perf_counter()
+                eng.score_coalesced(reqs)
+                walls.append(time.perf_counter() - t0)
+            wall = float(np.median(walls))
+            rec["qps"] = round(len(reqs) / wall, 2)
+            rec["rows_per_s"] = round(rec["pool"] / wall, 1)
+        records.append(rec)
+        eng.close()
+        if ref is not None:
+            ref.close()
+        if topo.process_id == 0:
+            print(json.dumps(rec), flush=True)
+    if topo.process_id == 0:
+        print(json.dumps({"ok": True, "records": len(records)}), flush=True)
+    return 0
+
+
+def spawn(args) -> int:
+    """Re-exec this module once per worker process on localhost.
+
+    Worker output goes to temp files, not pipes: the workers are coupled
+    through collectives, so serially draining pipes could deadlock the
+    fleet if one worker filled its pipe buffer (chatty XLA/gloo warnings)
+    while another held a collective open.
+    """
+    import tempfile
+
+    port = args.port or _free_port()
+    workers = []
+    for pid in range(args.spawn):
+        env = dict(os.environ)
+        env.update({
+            "REPRO_NUM_PROCESSES": str(args.spawn),
+            "REPRO_PROCESS_ID": str(pid),
+            "REPRO_COORDINATOR": f"localhost:{port}",
+            "REPRO_HOST_DEVICES": str(args.devices_per_process),
+        })
+        src = os.path.join(os.path.dirname(__file__), "..", "..")
+        env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                             + env.get("PYTHONPATH", ""))
+        cmd = [sys.executable, "-m", "repro.dist.runner",
+               "--modes", args.modes, "--scale", str(args.scale),
+               "--pool", str(args.pool), "--users", str(args.users),
+               "--max-batch", str(args.max_batch),
+               "--min-bucket", str(args.min_bucket),
+               "--passes", str(args.passes)]
+        for flag in ("verify", "bench", "compress_scores"):
+            if getattr(args, flag):
+                cmd.append("--" + flag.replace("_", "-"))
+        out_f = tempfile.TemporaryFile(mode="w+")
+        err_f = tempfile.TemporaryFile(mode="w+")
+        workers.append((subprocess.Popen(cmd, env=env, stdout=out_f,
+                                         stderr=err_f, text=True),
+                        out_f, err_f))
+    rc = 0
+    deadline = time.monotonic() + args.timeout
+    for pid, (p, out_f, err_f) in enumerate(workers):
+        try:
+            p.wait(timeout=max(1.0, deadline - time.monotonic()))
+        except subprocess.TimeoutExpired:
+            p.kill()
+            p.wait()
+            print(f"[runner] worker {pid} timed out", file=sys.stderr)
+            rc = 1
+        out_f.seek(0)
+        err_f.seek(0)
+        out, err = out_f.read(), err_f.read()
+        out_f.close()
+        err_f.close()
+        if pid == 0 and out:
+            sys.stdout.write(out)
+        if p.returncode != 0:
+            print(f"[runner] worker {pid} failed rc={p.returncode}:\n"
+                  + err[-3000:], file=sys.stderr)
+            rc = 1
+    return rc
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--spawn", type=int, default=0,
+                    help="spawn N localhost worker processes and exit")
+    ap.add_argument("--devices-per-process", type=int, default=2)
+    ap.add_argument("--port", type=int, default=0,
+                    help="coordinator port (0 = pick a free one)")
+    ap.add_argument("--modes", default=",".join(MODES))
+    ap.add_argument("--scale", type=float, default=0.03)
+    ap.add_argument("--pool", type=int, default=90)
+    ap.add_argument("--users", type=int, default=3)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--min-bucket", type=int, default=16)
+    ap.add_argument("--passes", type=int, default=5)
+    ap.add_argument("--verify", action="store_true",
+                    help="assert sharded == local fp32 scores bit-identically")
+    ap.add_argument("--bench", action="store_true",
+                    help="emit qps rows per mode")
+    ap.add_argument("--compress-scores", action="store_true",
+                    help="opt-in int8-compressed score all-gather")
+    ap.add_argument("--timeout", type=int, default=900)
+    args = ap.parse_args()
+    if args.spawn:
+        return spawn(args)
+    return run_worker(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,230 @@
+"""PartitionSpec rule sets for every model family + the serving specs.
+
+The seed's launch layer (``repro.launch.steps``) builds one jitted program
+per (architecture × input shape × mesh) cell; this module is where every
+in/out sharding it uses comes from. Rules, not enumerations: each family
+gets a function from config/graph to a pytree of ``PartitionSpec`` whose
+tree structure mirrors the param tree exactly, so ``jax.tree_util``
+transforms (``named``, ``zero1_pspecs``) apply mechanically.
+
+Conventions
+-----------
+* axis names: ``data`` (+ ``pod`` when multi-pod) carry batch parallelism,
+  ``model`` carries tensor parallelism, ``cand`` is the serving-side
+  candidate axis (see ``candidate_pspecs``).
+* a dim is sharded only when every production config divides evenly
+  (vocab pads to 256 = 16×16 precisely so embed/lm_head can consume both
+  axes); anything uncertain stays replicated — a replicated spec is always
+  valid, a non-divisible one is a compile error.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Embedding tables at or above this row count are worth model-sharding;
+# kept in sync with repro.models.recsys.SHARD_THRESHOLD (tables >= this pad
+# their vocab to a shardable multiple at build time).
+TABLE_SHARD_THRESHOLD = 65536
+
+# ZeRO-1 shards optimizer state over this many data-parallel ways in the
+# production meshes (16×16 single pod, 2×16×16 multi-pod: the 'data' axis
+# is 16 in both) — a dim is eligible only if it divides evenly.
+ZERO1_MULTIPLE = 16
+
+
+def _rep(shape) -> P:
+    """Rank-matched replicated spec (indexable per-dim, unlike P())."""
+    return P(*([None] * len(shape)))
+
+
+def named(mesh: Mesh, tree):
+    """Map every ``PartitionSpec`` leaf to ``NamedSharding(mesh, spec)``."""
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes that carry data parallelism ('pod' joins 'data' when the
+    mesh spans pods — gradient sync crosses DCN on that axis)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+# ---------------------------------------------------------------------------
+# LM family — Megatron-style tensor parallelism + ZeRO-1 optimizer state
+# ---------------------------------------------------------------------------
+
+def lm_param_pspecs(cfg) -> dict:
+    """PartitionSpecs mirroring ``init_lm_params(cfg)``.
+
+    Column-parallel in-projections (wq/wk/wv, wg/wu) shard their output
+    dim over 'model'; row-parallel out-projections (wo, wd) shard their
+    contraction dim, so each layer needs one all-reduce per block.
+    embed/lm_head consume ('model', 'data') jointly on the padded vocab
+    (vocab_padded % 256 == 0 by construction).
+    """
+    attn = {"wq": P(None, None, "model"), "wk": P(None, None, "model"),
+            "wv": P(None, None, "model"), "wo": P(None, "model", None)}
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None, None)
+        attn["k_norm"] = P(None, None)
+    if cfg.is_moe:
+        ffn = {"router": P(None, None, None),
+               "wg": P(None, None, None, "model"),
+               "wu": P(None, None, None, "model"),
+               "wd": P(None, None, "model", None)}
+    else:
+        ffn = {"wg": P(None, None, "model"), "wu": P(None, None, "model"),
+               "wd": P(None, "model", None)}
+    return {
+        "embed": P(("model", "data"), None),
+        "layers": {"attn": attn, "ffn": ffn,
+                   "ln1": P(None, None), "ln2": P(None, None)},
+        "final_norm": P(None),
+        "lm_head": P(None, ("model", "data")),
+    }
+
+
+def zero1_pspecs(pspecs, shapes, *, axis: str = "data",
+                 multiple: int = ZERO1_MULTIPLE):
+    """ZeRO-1: additionally shard optimizer-state replicas over ``axis``.
+
+    For each param, the largest dim that (a) is unsharded in the param
+    spec and (b) divides by ``multiple`` gets ``axis``; params already
+    touching ``axis`` (embed/lm_head) and params with no eligible dim keep
+    their spec. No axis ever appears twice in one spec by construction.
+    """
+    def one(spec: P, sds) -> P:
+        used = [a for part in spec if part
+                for a in (part if isinstance(part, tuple) else (part,))]
+        if axis in used:
+            return spec
+        shape = sds.shape
+        parts = list(spec) + [None] * (len(shape) - len(spec))
+        best, best_size = None, 0
+        for i, (part, size) in enumerate(zip(parts, shape)):
+            if part is None and size % multiple == 0 and size > best_size:
+                best, best_size = i, size
+        if best is None:
+            return spec
+        parts[best] = axis
+        return P(*parts)
+
+    return jax.tree_util.tree_map(
+        one, pspecs, shapes, is_leaf=lambda x: isinstance(x, P))
+
+
+def lm_batch_pspec(mesh: Mesh) -> P:
+    """(B, S) token batches: batch over the DP axes, sequence replicated."""
+    return P(dp_axes(mesh), None)
+
+
+def lm_cache_pspecs(mesh: Mesh, batch: int) -> dict:
+    """KV cache (L, B, W, n_kv_heads, hd): batch dim over DP when it
+    divides; heads stay replicated (n_kv_heads rarely divides the TP
+    degree — GQA archs have 4-8 KV heads vs model=16)."""
+    ndp = 1
+    dp = dp_axes(mesh)
+    for a in dp:
+        ndp *= mesh.shape[a]
+    lead = dp if batch % ndp == 0 and batch >= ndp else None
+    spec = P(None, lead, None, None, None)
+    return {"k": spec, "v": spec}
+
+
+def lm_state_pspecs(cfg, params_shapes=None) -> dict:
+    """Train-state specs: Megatron params + ZeRO-1 adamw moments/master."""
+    pp = lm_param_pspecs(cfg)
+    if params_shapes is None:
+        from repro.models.transformer import lm_param_specs
+        params_shapes = lm_param_specs(cfg)
+    zp = zero1_pspecs(pp, params_shapes)
+    return {"params": pp,
+            "opt": {"mu": zp, "nu": zp, "master": zp, "step": P()}}
+
+
+# ---------------------------------------------------------------------------
+# RecSys family — big embedding tables sharded, dense layers replicated
+# ---------------------------------------------------------------------------
+
+def recsys_param_pspecs(graph, table_axes: tuple[str, ...] = ("model",)
+                        ) -> dict:
+    """PartitionSpecs mirroring ``init_graph_params(graph)``.
+
+    Embedding tables at/above ``TABLE_SHARD_THRESHOLD`` rows shard their
+    vocab dim over ``table_axes`` (their vocab is padded to a shardable
+    multiple at build time — ``repro.models.recsys.pad_vocab``); small
+    tables and every dense/attention weight replicate. MaRI's premise is
+    that ranker MLPs are small relative to the tables — replicating them
+    trades negligible memory for zero matmul collectives.
+    """
+    from repro.graph.executor import init_graph_params
+
+    sds = jax.eval_shape(
+        lambda: init_graph_params(graph, jax.random.PRNGKey(0)))
+    pp = jax.tree_util.tree_map(lambda s: _rep(s.shape), sds)
+    lead = table_axes[0] if len(table_axes) == 1 else table_axes
+    for n in graph.param_nodes():
+        if (n.op == "embedding"
+                and n.attrs["vocab"] >= TABLE_SHARD_THRESHOLD):
+            pp[n.name]["table"] = P(lead, None)
+    return pp
+
+
+def recsys_feed_pspecs(graph, mesh: Mesh, train: bool = False) -> dict:
+    """Input feeds: candidate/example rows over DP; serving-time user feeds
+    (leading dim 1) replicated."""
+    dp = dp_axes(mesh)
+    specs = {}
+    for n in graph.input_nodes():
+        rank = 1 + len(n.attrs["shape"])
+        lead = dp if (train or n.attrs.get("domain") != "user") else None
+        specs[n.name] = P(lead, *([None] * (rank - 1)))
+    return specs
+
+
+def recsys_state_pspecs(graph, table_axes: tuple[str, ...] = ("model",)
+                        ) -> dict:
+    """Train-state specs: adam moments shard exactly like their params
+    (the moment of a sharded table is itself that table's size)."""
+    pp = recsys_param_pspecs(graph, table_axes=table_axes)
+    return {"params": pp, "opt": {"mu": pp, "nu": pp, "step": P()}}
+
+
+# ---------------------------------------------------------------------------
+# GNN family — small params, fully replicated (edges carry the parallelism)
+# ---------------------------------------------------------------------------
+
+def gnn_state_pspecs(params_shapes) -> dict:
+    pp = jax.tree_util.tree_map(lambda s: _rep(s.shape), params_shapes)
+    return {"params": pp, "opt": {"mu": pp, "nu": pp, "step": P()}}
+
+
+# ---------------------------------------------------------------------------
+# Serving stage 2 — candidate-axis sharding over a 'cand' mesh
+# ---------------------------------------------------------------------------
+
+def candidate_pspecs(mesh: Mesh, *, replicate_out: bool | None = None
+                     ) -> tuple[tuple, object]:
+    """(in_shardings, out_shardings) for the row-wise stage-2 executable
+    ``fn(params, rep_table, user_index, candidate_feeds) -> outs``.
+
+    Params and the stacked (U, ...) user-rep tables replicate (they are
+    small and every shard needs every user); the per-row user index and
+    the candidate feeds shard over 'cand'; each device scores its candidate
+    rows with zero in-flight collectives.
+
+    Output: sharded over 'cand' in single-process meshes (the host reads
+    all device shards directly); replicated when the mesh spans processes
+    (the closing all-gather is the ONE collective of the serving step, and
+    it hands every host the full score vector). ``replicate_out`` forces
+    either form.
+    """
+    if replicate_out is None:
+        replicate_out = len(set(d.process_index for d in
+                                mesh.devices.flat)) > 1
+    repl = NamedSharding(mesh, P())
+    shard = NamedSharding(mesh, P("cand"))
+    out = repl if replicate_out else shard
+    return (repl, repl, shard, shard), out

@@ -33,6 +33,13 @@ from repro.graph.ir import Graph, Node, infer_shapes
 from repro.nn.layers import ACTIVATIONS
 from repro.nn.attention import cross_attention
 
+# Reserved feed key: per-candidate-row user index for kernel-side gather.
+# When present, input nodes listed in ``Executor.lazy_gather_inputs``
+# receive their STACKED (U, ...) rep table as the fed value and the Pallas
+# mari_matmul kernel gathers row ``user_index[b]`` at accumulator-init load
+# time — the gathered (B, units) block never materializes.
+USER_INDEX_FEED = "__user_index__"
+
 
 def init_graph_params(graph: Graph, key, dtype=jnp.float32) -> dict:
     """Initialize params for every parameterized node."""
@@ -168,14 +175,18 @@ def _mari_dense_operands(node: Node, params: dict, vals: dict):
 
 
 def _run_mari_dense(node: Node, params: dict, vals: dict, *,
-                    use_pallas: bool = False, interpret: bool = True) -> Array:
+                    use_pallas: bool = False, interpret: bool = True,
+                    user_index: Array | None = None) -> Array:
     """Eq. 7: Tile(Σ_user x_u W_u, B) + Σ_rest x W  — tile realized as a
     broadcast add (never materialized).
 
     With ``use_pallas`` the batched side dispatches to the fused Pallas
     kernel (``kernels.mari_matmul``): user row as accumulator init, bias and
     activation applied in the kernel epilogue, so the (B, units)
-    pre-activation never round-trips through HBM.
+    pre-activation never round-trips through HBM. With ``user_index`` the
+    precomputed partial arrives as a stacked (U, units) table and the
+    kernel gathers row ``user_index[b]`` at accumulator-init load time
+    (bit-identical: gather commutes with the elementwise epilogue).
     """
     attrs = node.attrs
     parts, acc0, bias = _mari_dense_operands(node, params, vals)
@@ -183,8 +194,11 @@ def _run_mari_dense(node: Node, params: dict, vals: dict, *,
     if use_pallas:
         from repro.kernels.mari_matmul import mari_matmul_fused_groups
         return mari_matmul_fused_groups(parts, bias, acc0=acc0,
+                                        user_index=user_index,
                                         activation=activation,
                                         interpret=interpret)
+    if user_index is not None and acc0 is not None:
+        acc0 = jnp.take(acc0, user_index, axis=0)   # jnp fallback: gather
     acc = acc0
     for x, w in parts:
         y = x @ w
@@ -198,7 +212,8 @@ class Executor:
     """Interpret a graph. Construct once, then jit ``run``."""
 
     def __init__(self, graph: Graph, mode: str = "uoi", *,
-                 use_pallas: bool = False, pallas_interpret: bool | None = None):
+                 use_pallas: bool = False, pallas_interpret: bool | None = None,
+                 kernel_gather: bool = False):
         if mode not in ("vani", "uoi"):
             raise ValueError(f"mode must be 'vani' or 'uoi', got {mode!r}")
         self.graph = graph
@@ -212,11 +227,35 @@ class Executor:
         self._user_inputs = {
             n.name for n in graph.input_nodes() if n.attrs.get("domain") == "user"
         }
+        # kernel-side gather: user-side inputs consumed ONLY as a Pallas
+        # mari_dense accumulator init may be fed as stacked (U, units) rep
+        # tables + a USER_INDEX_FEED row index; the kernel gathers at
+        # accumulator-init load. Any other consumer needs the materialized
+        # row-wise value, so such inputs stay on the explicit-gather path.
+        self.lazy_gather_inputs: frozenset[str] = frozenset()
+        if kernel_gather and use_pallas:
+            lazy = set()
+            for n in graph.input_nodes():
+                if n.attrs.get("domain") != "user":
+                    continue
+                cons = graph.consumers(n.name)
+                if cons and all(
+                        c.op == "mari_dense"
+                        and c.attrs.get("precomputed_user")
+                        and not c.attrs.get("cast_dtype")
+                        and c.inputs[0] == n.name
+                        and c.inputs.count(n.name) == 1
+                        for c in cons):
+                    lazy.add(n.name)
+            self.lazy_gather_inputs = frozenset(lazy)
 
     def run(self, params: dict, feeds: Mapping[str, Array]) -> dict[str, Array]:
         vals: dict[str, Array] = {}
+        if USER_INDEX_FEED in feeds:
+            vals[USER_INDEX_FEED] = feeds[USER_INDEX_FEED]
         batch = max((v.shape[0] for k, v in feeds.items()
-                     if k not in self._user_inputs), default=1)
+                     if k not in self._user_inputs and k != USER_INDEX_FEED),
+                    default=1)
         for n in self.graph.topo_order():
             vals[n.name] = self._eval(n, params, vals, feeds, batch)
         return {o: vals[o] for o in self.graph.outputs}
@@ -244,8 +283,12 @@ class Executor:
             # The Pallas path requires a clean f32 pipeline; mixed-precision
             # (cast_dtype) nodes keep the jnp path.
             use_pallas = self.use_pallas and not n.attrs.get("cast_dtype")
+            uidx = (vals.get(USER_INDEX_FEED)
+                    if n.inputs and n.inputs[0] in self.lazy_gather_inputs
+                    else None)
             return _run_mari_dense(n, params, vals, use_pallas=use_pallas,
-                                   interpret=self.pallas_interpret)
+                                   interpret=self.pallas_interpret,
+                                   user_index=uidx)
         if op == "mari_user_partial":
             # Stage-1 half of a split mari_dense: Σ_user x_u W_u (+ b), a
             # (1, units) row the batched stage consumes as accumulator init.

@@ -1,3 +1,7 @@
+from repro.kernels.mari_matmul.kernel import (  # noqa: F401
+    mari_matmul_kernel,
+    mari_matmul_kernel_gather,
+)
 from repro.kernels.mari_matmul.ops import (  # noqa: F401
     mari_matmul_fused,
     mari_matmul_fused_groups,

@@ -51,6 +51,27 @@ def _kernel(x_ref, w_ref, u_ref, o_ref, acc_ref, *, activation):
         o_ref[...] = _EPILOGUES[activation](acc_ref[...]).astype(o_ref.dtype)
 
 
+def _kernel_gather(x_ref, w_ref, u_ref, idx_ref, o_ref, acc_ref, *,
+                   activation):
+    """Row-wise variant with the user-rep gather folded into the
+    accumulator-init load: ``u_ref`` is the full (U, bn) column tile of the
+    stacked rep table and ``idx_ref`` this row-tile's (bm, 1) user indices;
+    row r initializes from table row ``idx[r]`` — the gathered (B, d)
+    block never exists in HBM. U is small (the pow2-padded user-slot count
+    of one coalesced batch), so the table tile stays VMEM-resident."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        idx = idx_ref[...][:, 0]
+        acc_ref[...] = jnp.take(u_ref[...], idx, axis=0).astype(jnp.float32)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[...] = _EPILOGUES[activation](acc_ref[...]).astype(o_ref.dtype)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("bm", "bn", "bk", "activation", "interpret"))
 def mari_matmul_kernel(x_rest, w_rest, u_row, *, bm=128, bn=128, bk=512,
@@ -91,3 +112,44 @@ def mari_matmul_kernel(x_rest, w_rest, u_row, *, bm=128, bn=128, bk=512,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x_rest, w_rest, u_row)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "activation", "interpret"))
+def mari_matmul_kernel_gather(x_rest, w_rest, u_table, user_index, *,
+                              bm=128, bn=128, bk=512,
+                              activation="identity", interpret=False):
+    """act(x_rest (B, Dr) @ w_rest (Dr, d) + u_table[user_index]).
+
+    ``u_table`` is the stacked (U, d) per-user accumulator-init table
+    (cross-user coalesced serving) and ``user_index`` the (B,) row->user
+    map; the gather happens at accumulator-init load inside the kernel,
+    so the (B, d) gathered block is never materialized. Bit-identical to
+    ``mari_matmul_kernel(x, w, u_table[user_index])`` — a gather is an
+    exact row copy and commutes with the elementwise epilogue.
+
+    Caller guarantees B % bm == 0, d % bn == 0, Dr % bk == 0 (ops.py pads).
+    """
+    B, Dr = x_rest.shape
+    d = w_rest.shape[1]
+    U = u_table.shape[0]
+    assert B % bm == 0 and d % bn == 0 and Dr % bk == 0, (B, Dr, d, bm, bn, bk)
+    if user_index.shape != (B,):
+        raise ValueError(f"user_index must be ({B},), got {user_index.shape}")
+    if activation not in _EPILOGUES:
+        raise ValueError(f"unsupported epilogue activation {activation!r}")
+    idx2d = user_index.astype(jnp.int32).reshape(B, 1)
+    return pl.pallas_call(
+        functools.partial(_kernel_gather, activation=activation),
+        grid=(B // bm, d // bn, Dr // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),   # x tile
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),   # w tile
+            pl.BlockSpec((U, bn), lambda i, j, k: (0, j)),    # rep-table tile
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),    # row indices
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((B, d), x_rest.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x_rest, w_rest, u_table, idx2d)

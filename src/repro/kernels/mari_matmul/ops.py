@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common import round_up
-from repro.kernels.mari_matmul.kernel import _EPILOGUES, mari_matmul_kernel
+from repro.kernels.mari_matmul.kernel import (_EPILOGUES, mari_matmul_kernel,
+                                              mari_matmul_kernel_gather)
 
 _VMEM_BUDGET = 8 * 1024 * 1024  # bytes; conservative half of v5e VMEM
 
@@ -34,7 +35,7 @@ def _pick_blocks(B: int, Dr: int, d: int, itemsize: int) -> tuple[int, int, int]
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "interpret"))
-def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
+def mari_matmul_fused_groups(parts, b=None, *, acc0=None, user_index=None,
                              activation="identity", interpret=True):
     """act(Σ_g Tile-or-stream(x_g @ w_g) + acc0 + b) for (x, w) pairs.
 
@@ -42,8 +43,12 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
     (B, D_g) (batched side — streamed through the MXU). ``acc0`` is an
     optional precomputed partial added to the accumulator init — a (1, d)
     row (one user per batch) or a row-wise (B, d) block (cross-user
-    coalesced serving: row b carries user b's partial). interpret=True on
-    CPU (validation); False on TPU.
+    coalesced serving: row b carries user b's partial). With
+    ``user_index`` (B,), ``acc0`` is instead the STACKED (U, d) per-user
+    table and the kernel gathers row ``user_index[b]`` at accumulator-init
+    load — the gathered (B, d) block never materializes (bit-identical:
+    the row adds/epilogue commute with the exact row-copy gather).
+    interpret=True on CPU (validation); False on TPU.
     """
     d = parts[0][1].shape[1]
     user = [(x, w) for x, w in parts if x.shape[0] == 1]
@@ -55,12 +60,16 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
     for x, w in user:
         u = u + x.astype(jnp.float32) @ w.astype(jnp.float32)
     if acc0 is not None:
-        u = u + acc0.astype(jnp.float32)   # (B, d) acc0 broadcasts u row-wise
+        # (B, d) acc0 broadcasts u row-wise; a (U, d) table (user_index
+        # set) broadcasts identically — per-slot rows, gathered below
+        u = u + acc0.astype(jnp.float32)
     if b is not None:
         u = u + b.astype(jnp.float32)
 
     if not rest:  # no batched stream left: acc-init row/block IS the output
         out = _EPILOGUES[activation](u)
+        if user_index is not None and acc0 is not None:
+            out = jnp.take(out, user_index, axis=0)
         return out.astype(parts[0][0].dtype)
 
     B = max(x.shape[0] for x, _ in rest)
@@ -78,6 +87,14 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None,
     Bp, Drp, dp = round_up(B, bm), round_up(Dr, bk), round_up(d, bn)
     xp = jnp.pad(x_rest, ((0, Bp - B), (0, Drp - Dr)))
     wp = jnp.pad(w_rest, ((0, Drp - Dr), (0, dp - d)))
+    if user_index is not None and acc0 is not None:
+        # table layout (U, d): pad columns only; pad rows index slot 0
+        up = jnp.pad(u, ((0, 0), (0, dp - d)))
+        idx = jnp.pad(user_index.astype(jnp.int32), (0, Bp - B))
+        out = mari_matmul_kernel_gather(xp, wp, up, idx, bm=bm, bn=bn,
+                                        bk=bk, activation=activation,
+                                        interpret=interpret)
+        return out[:B, :d]
     # row-wise acc-init pads its batch dim alongside x; a single row does not
     up = jnp.pad(u, ((0, Bp - B if u.shape[0] == B else 0), (0, dp - d)))
     out = mari_matmul_kernel(xp, wp, up, bm=bm, bn=bn, bk=bk,

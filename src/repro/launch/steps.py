@@ -47,12 +47,9 @@ class CellProgram:
                        donate_argnums=self.donate_argnums)
 
     def lower(self):
-        import contextlib
-
         from repro.dist import policy
-        ctx = (jax.set_mesh(self.mesh) if self.mesh is not None
-               else contextlib.nullcontext())
-        with policy.use(**self.policy_kv), ctx:
+        from repro.launch.mesh import mesh_context
+        with policy.use(**self.policy_kv), mesh_context(self.mesh):
             return self.jitted().lower(*self.args)
 
 

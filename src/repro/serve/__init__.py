@@ -7,18 +7,26 @@ grown into an async, multi-user subsystem:
   residual) is ONE row-wise executable family — each candidate row gathers
   its own user's cached reps via a per-row user index — so a single request
   (U=1) and a cross-user coalesced batch run the same code and produce
-  bit-identical scores. Options: fused Pallas ``mari_dense`` dispatch,
-  build-time grouped-weight pre-concatenation, and candidate-axis device
-  sharding (``jax.sharding``; rep tables replicated).
+  bit-identical scores. Options: fused Pallas ``mari_dense`` dispatch
+  (optionally with the kernel-side user-rep gather), build-time
+  grouped-weight pre-concatenation, and candidate-axis sharding on the
+  ``repro.dist`` 'cand' mesh — single-process ``jax.sharding`` or SPMD
+  across ``jax.distributed`` worker processes (rep tables replicated,
+  shard-aligned buckets, optional int8-compressed score gather).
 * ``batcher`` — ``CoalescingBatcher``: async request queue that packs
   candidate chunks from different users into shared power-of-two stage-2
-  buckets (cross-user batching).
+  buckets (cross-user batching), with SLO classes — deadline-tagged
+  requests jump the FIFO and shrink the linger window.
 * ``cache``   — ``UserRepCache``: bounded LRU user-representation store
   with eviction accounting and per-user invalidation.
 * ``hedging`` — ``HedgePolicy`` (rolling-p99 decision) + ``HedgedRunner``
   (real duplicate execution of straggling chunks, first result wins).
 """
-from repro.serve.batcher import CoalescingBatcher  # noqa: F401
+from repro.serve.batcher import (  # noqa: F401
+    SLO_BEST_EFFORT,
+    SLO_DEADLINE,
+    CoalescingBatcher,
+)
 from repro.serve.cache import UserRepCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     ServeRequest,

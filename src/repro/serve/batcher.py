@@ -26,30 +26,77 @@ candidate rows / ``max_coalesce`` requests are waiting) collecting
 co-arriving requests before handing the group to the engine. Coalesced
 scores are bit-identical to per-request ``engine.score`` — both run the
 same row-wise executable family.
+
+**SLO classes** — ``submit(req, slo="deadline", deadline_ms=...)`` marks a
+request latency-critical: deadline requests jump the FIFO (the queue is
+priority-ordered, FIFO within each class) and shrink the linger window —
+a group opened by (or joined by) a deadline request lingers only
+``linger_ms * deadline_linger_frac``, further capped by the request's
+remaining deadline budget, so a latency-critical arrival never waits out a
+full best-effort linger behind older bulk traffic.
+
+The priority is strict: a workload whose deadline-class arrival rate alone
+saturates the worker starves queued best-effort requests for as long as
+the saturation lasts. That is the intended contract — the deadline class
+is for a small latency-critical fraction of traffic, and protecting the
+queue from a caller who tags everything "deadline" is admission control's
+job (upstream of this batcher), not the dispatcher's. ``deadline_requests
+/ requests`` is the counter to alarm on.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import Sequence
 
 from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
 
+SLO_BEST_EFFORT = "best_effort"
+SLO_DEADLINE = "deadline"
+_PRIO = {SLO_DEADLINE: 0, SLO_BEST_EFFORT: 1}
+
+
+@dataclasses.dataclass(order=True)
+class _Item:
+    """Priority-queue entry: deadline class first, FIFO within a class."""
+    prio: int
+    seq: int
+    req: ServeRequest | None = dataclasses.field(compare=False, default=None)
+    fut: Future | None = dataclasses.field(compare=False, default=None)
+    deadline_at: float | None = dataclasses.field(compare=False, default=None)
+
 
 class CoalescingBatcher:
     def __init__(self, engine: ServingEngine, *, linger_ms: float = 2.0,
-                 max_coalesce: int = 64, auto_start: bool = True):
+                 max_coalesce: int = 64, auto_start: bool = True,
+                 deadline_linger_frac: float = 0.25):
+        if getattr(engine, "_multiproc", False):
+            # same hazard class as hedging under SPMD: each process's
+            # batcher thread would form groups from its own wall-clock
+            # linger/scheduling, so dispatch sequences (and collective
+            # schedules) diverge across workers and the fleet deadlocks.
+            # Multi-process serving drives score_coalesced directly in
+            # lockstep (repro.dist.runner).
+            raise ValueError(
+                "CoalescingBatcher cannot wrap a multi-process sharded "
+                "engine: group formation is timing-dependent and would "
+                "desynchronize the SPMD collective schedule")
         self.engine = engine
         self.linger_ms = linger_ms
         self.max_coalesce = max_coalesce
-        self._q: queue.Queue = queue.Queue()
+        self.deadline_linger_frac = deadline_linger_frac
+        self._q: queue.PriorityQueue = queue.PriorityQueue()
+        self._seq = 0
         self._stop = threading.Event()
         self._lock = threading.Lock()     # serializes submit vs close
         self._worker: threading.Thread | None = None
         self.batches = 0              # engine handoffs
         self.coalesced_requests = 0   # requests scored in a >1-request group
         self.requests = 0
+        self.deadline_requests = 0    # submitted with the deadline SLO
         if auto_start:
             self.start()
 
@@ -66,7 +113,7 @@ class CoalescingBatcher:
         """Stop the worker after the queue drains; fail anything stranded."""
         with self._lock:              # no submit can interleave past here
             self._stop.set()
-            self._q.put(None)         # wake the worker
+            self._q.put(_Item(prio=2, seq=self._next_seq()))  # wake worker
         if self._worker is not None:
             self._worker.join(timeout=30)
             self._worker = None
@@ -77,8 +124,9 @@ class CoalescingBatcher:
                 item = self._q.get_nowait()
             except queue.Empty:
                 break
-            if item is not None and item[1].set_running_or_notify_cancel():
-                item[1].set_exception(RuntimeError("batcher closed"))
+            if (item.fut is not None
+                    and item.fut.set_running_or_notify_cancel()):
+                item.fut.set_exception(RuntimeError("batcher closed"))
 
     def __enter__(self) -> "CoalescingBatcher":
         return self
@@ -87,28 +135,59 @@ class CoalescingBatcher:
         self.close()
 
     # -- submission ---------------------------------------------------------
-    def submit(self, req: ServeRequest) -> "Future[ServeResult]":
-        """Enqueue a request; resolves once its group has been scored."""
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    def submit(self, req: ServeRequest, *, slo: str = SLO_BEST_EFFORT,
+               deadline_ms: float | None = None) -> "Future[ServeResult]":
+        """Enqueue a request; resolves once its group has been scored.
+
+        ``slo="deadline"`` marks it latency-critical: it jumps ahead of
+        queued best-effort requests and shrinks its group's linger.
+        ``deadline_ms`` (optional, implies the deadline class) additionally
+        caps the linger by the remaining budget.
+        """
+        if deadline_ms is not None:
+            slo = SLO_DEADLINE
+        if slo not in _PRIO:
+            raise ValueError(f"unknown SLO class {slo!r}")
         with self._lock:              # atomic vs the close() shutdown decision
             if (self._stop.is_set() or self._worker is None
                     or not self._worker.is_alive()):
                 raise RuntimeError("batcher is not running (call start())")
             fut: Future = Future()
             self.requests += 1
-            self._q.put((req, fut))
+            if slo == SLO_DEADLINE:
+                self.deadline_requests += 1
+            deadline_at = (time.perf_counter() + deadline_ms / 1e3
+                           if deadline_ms is not None else None)
+            self._q.put(_Item(prio=_PRIO[slo], seq=self._next_seq(),
+                              req=req, fut=fut, deadline_at=deadline_at))
         return fut
 
-    def score_many(self, reqs: Sequence[ServeRequest]) -> list[ServeResult]:
+    def score_many(self, reqs: Sequence[ServeRequest],
+                   slo: str = SLO_BEST_EFFORT) -> list[ServeResult]:
         """Submit a burst of concurrent requests; wait for all results."""
-        futs = [self.submit(r) for r in reqs]
+        futs = [self.submit(r, slo=slo) for r in reqs]
         return [f.result() for f in futs]
 
     # -- worker -------------------------------------------------------------
     def _candidate_rows(self, req: ServeRequest) -> int:
         return next(iter(req.candidate_feeds.values())).shape[0]
 
+    def _linger_until(self, item: _Item, now: float) -> float:
+        """Group-close time implied by one member: full linger for
+        best-effort, the shrunken deadline linger (further capped by the
+        request's remaining budget) for deadline-class requests."""
+        if item.prio == _PRIO[SLO_DEADLINE]:
+            until = now + self.linger_ms * self.deadline_linger_frac / 1e3
+            if item.deadline_at is not None:
+                until = min(until, item.deadline_at)
+            return until
+        return now + self.linger_ms / 1e3
+
     def _run(self) -> None:
-        import time
         while True:
             try:
                 item = self._q.get(timeout=0.05)
@@ -116,13 +195,13 @@ class CoalescingBatcher:
                 if self._stop.is_set():
                     return
                 continue
-            if item is None:
+            if item.req is None:
                 if self._stop.is_set() and self._q.empty():
                     return
                 continue
             group = [item]
-            rows = self._candidate_rows(item[0])
-            deadline = time.perf_counter() + self.linger_ms / 1e3
+            rows = self._candidate_rows(item.req)
+            deadline = self._linger_until(item, time.perf_counter())
             while (len(group) < self.max_coalesce
                    and rows < self.engine.max_batch):
                 timeout = deadline - time.perf_counter()
@@ -132,21 +211,25 @@ class CoalescingBatcher:
                     nxt = self._q.get(timeout=timeout)
                 except queue.Empty:
                     break
-                if nxt is None:
+                if nxt.req is None:
                     continue
                 group.append(nxt)
-                rows += self._candidate_rows(nxt[0])
+                rows += self._candidate_rows(nxt.req)
+                # a deadline request joining an open group truncates the
+                # remaining linger to its own (shrunken) window
+                deadline = min(deadline,
+                               self._linger_until(nxt, time.perf_counter()))
             self._score_group(group)
             if self._stop.is_set() and self._q.empty():
                 return
 
-    def _score_group(self, group: list) -> None:
+    def _score_group(self, group: list[_Item]) -> None:
         # claim each future before doing work: a waiter that cancelled while
         # its request sat queued is dropped here, and a claimed (RUNNING)
         # future can no longer be cancelled — so set_result below cannot
         # race a cancel and kill the worker with InvalidStateError
-        group = [(req, fut) for req, fut in group
-                 if fut.set_running_or_notify_cancel()]
+        group = [(it.req, it.fut) for it in group
+                 if it.fut.set_running_or_notify_cancel()]
         if not group:
             return
         reqs = [req for req, _ in group]

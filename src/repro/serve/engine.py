@@ -30,9 +30,19 @@ Knobs beyond the seed engine:
 * ``hedging`` — REAL duplicate execution of straggling chunks with
   first-result-wins (``repro.serve.hedging``), replacing the seed's
   decision-only counter;
-* ``shard_candidates`` — device-shard stage 2 over the candidate axis via
-  ``jax.sharding`` (user rep tables replicated, candidate rows + user index
-  split across devices), the single-host form of multi-host stage-2 sharding.
+* ``shard_candidates`` — shard stage 2 over the candidate axis on the
+  ``repro.dist`` 'cand' mesh (user rep tables + params replicated,
+  candidate rows + user index split across shards). Single-process
+  ``jax.sharding`` is the degenerate case; when ``jax.distributed`` is
+  initialized the same engine runs SPMD across processes — every worker
+  executes the identical dispatch sequence, inputs are globalized onto the
+  multi-host mesh, and the closing score all-gather (the step's one
+  collective) hands every host the full result. Buckets come from the
+  collective-aware planner (``repro.dist.topology``), so no shard ever
+  sees a ragged tail;
+* ``kernel_gather`` — with ``use_pallas``, skip materializing the gathered
+  row-wise ``mari_dense`` partials: the Pallas kernel indexes the stacked
+  (U, units) rep table by ``user_index`` at accumulator-init load time.
 """
 from __future__ import annotations
 
@@ -43,11 +53,11 @@ from typing import Mapping, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.common import next_pow2 as _next_pow2, prev_pow2
 from repro.core.mari import mari_rewrite, convert_params
 from repro.core.split import split_two_stage
-from repro.graph.executor import Executor
+from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
 from repro.serve.cache import UserRepCache
 from repro.serve.hedging import HedgedRunner, HedgePolicy
@@ -70,13 +80,6 @@ class ServeResult:
     hedged: int = 0              # dispatches that launched a duplicate
     stage1_ms: float = 0.0       # 0 when cached / single-stage
     coalesced: bool = False      # scored inside a cross-user batch
-
-
-def _next_pow2(n: int) -> int:
-    p = 1
-    while p < n:
-        p *= 2
-    return p
 
 
 def _precat_mari_weights(graph: Graph, params: dict) -> dict:
@@ -124,7 +127,9 @@ class ServingEngine:
                  fragment: bool = False, group_by_domain: bool = False,
                  max_cached_users: int | None = None,
                  precat_weights: bool = True,
-                 shard_candidates: bool = False,
+                 shard_candidates: bool | int = False,
+                 compress_scores: bool = False,
+                 kernel_gather: bool = False,
                  hedging: bool = True,
                  hedge_policy: HedgePolicy | None = None,
                  max_users_per_batch: int = 8):
@@ -172,19 +177,53 @@ class ServingEngine:
                 self.two_stage = False
 
         # -- candidate-axis sharding (stage 2): candidate rows + user index
-        # split across devices, params and rep tables replicated -----------
-        self.shard_candidates = shard_candidates
+        # split across shards, params and rep tables replicated. The mesh
+        # and specs come from repro.dist; a single process over local
+        # devices is the degenerate case of the multi-process topology. --
+        self.shard_candidates = bool(shard_candidates)
         self._in_shardings = self._out_shardings = None
+        self._n_shards = 1
+        self._multiproc = False
+        self.compress_scores = False
+        if compress_scores and not shard_candidates:
+            raise ValueError("compress_scores is the int8 cross-shard score "
+                             "gather — it requires shard_candidates")
         if shard_candidates:
-            n = len(jax.devices())
-            ndev = 1 << (n.bit_length() - 1)          # largest pow2 <= n
-            self.mesh = Mesh(np.array(jax.devices()[:ndev]), ("cand",))
-            repl = NamedSharding(self.mesh, P())
-            shard = NamedSharding(self.mesh, P("cand"))
-            # pow2 buckets >= ndev divide evenly across the mesh
-            self.min_bucket = min(max(self.min_bucket, ndev), max_batch)
-            self._in_shardings = (repl, repl, shard, shard)
-            self._out_shardings = shard
+            from repro.dist.sharding import candidate_pspecs
+            from repro.dist.topology import candidate_mesh
+            n_shards = (None if shard_candidates is True
+                        else int(shard_candidates))
+            # never shard wider than the caller's row budget allows: a
+            # dispatch must give every shard >= 1 row within max_batch
+            cap = prev_pow2(max_batch)
+            self.mesh = candidate_mesh(cap if n_shards is None
+                                       else min(n_shards, cap))
+            self._n_shards = int(self.mesh.devices.size)
+            self._multiproc = len({d.process_index
+                                   for d in self.mesh.devices.flat}) > 1
+            if self._multiproc:
+                # SPMD lockstep: every process must issue the identical
+                # dispatch sequence, so a per-process duplicate execution
+                # (hedging) would desynchronize the collective schedule.
+                hedging = False
+            # buckets stay multiples of the shard count (pow2 / pow2):
+            # no shard ever receives a ragged tail. The row cap itself must
+            # divide evenly over the mesh, so a non-pow2 max_batch rounds
+            # DOWN to the nearest power of two — never above the caller's
+            # cap (the mesh was clamped to prev_pow2(max_batch) shards).
+            if self._n_shards > 1:
+                self.max_batch = prev_pow2(self.max_batch)
+            self.min_bucket = min(max(self.min_bucket, self._n_shards),
+                                  self.max_batch)
+            self.compress_scores = compress_scores
+            self._in_shardings, self._out_shardings = candidate_pspecs(
+                self.mesh, replicate_out=(True if self._multiproc else None))
+            if self.compress_scores:
+                # the closing gather itself moves int8: stage 2 leaves its
+                # scores device-sharded and the compressed all-gather (one
+                # quantized collective) replicates them to every host
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                self._out_shardings = NamedSharding(self.mesh, P("cand"))
         else:
             self.mesh = None
 
@@ -204,6 +243,16 @@ class ServingEngine:
             self._stage1_inputs = {
                 n.name for n in self.split.stage1.input_nodes()}
             batched_graph = self.split.stage2
+            if self._in_shardings is not None:
+                # the rep-table arg's shardings come from the split's own
+                # boundary contract (per-entry rank-matched replication)
+                # rather than a blanket spec — the table dict keys are
+                # exactly the boundary names
+                from repro.dist.sharding import named
+                self._in_shardings = (
+                    self._in_shardings[0],
+                    named(self.mesh, split.boundary_pspecs()),
+                    self._in_shardings[2], self._in_shardings[3])
         else:
             self.split = None
             self._stage1 = None
@@ -212,8 +261,26 @@ class ServingEngine:
         self.precat_weights = precat_weights
         if precat_weights:
             self.params = _precat_mari_weights(batched_graph, self.params)
+        self.kernel_gather = kernel_gather and use_pallas
         self._stage2 = self._build_rowwise(batched_graph, exec_mode,
                                            use_pallas)
+        # multi-process: stage 2 consumes params as a globalized replica on
+        # the cross-host mesh; stage 1 keeps the process-local copy
+        self._params_s2 = self.params
+        if self._multiproc:
+            repl = self._in_shardings[0]
+            self._params_s2 = jax.tree_util.tree_map(
+                lambda v: self._globalize(v, repl), self.params)
+        self._cgather = None
+        if self.compress_scores:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from repro.dist.compress import compressed_all_gather
+            # check_rep off: the all-gathered result IS replicated, but the
+            # checker can't prove it through the per-shard scale arithmetic
+            self._cgather = jax.jit(shard_map(
+                lambda x: compressed_all_gather(x, "cand"), mesh=self.mesh,
+                in_specs=P("cand"), out_specs=P(), check_rep=False))
 
         self.stage1_calls = 0                 # trace counter for the split test
         self.stage2_calls = 0                 # total row-wise dispatches
@@ -227,6 +294,15 @@ class ServingEngine:
                         if hedging else None)
 
     # -- build-time compilation helpers -------------------------------------
+    @staticmethod
+    def _globalize(x, sharding):
+        """Lift a host value onto a (possibly cross-process) mesh: every
+        process passes the identical global value and contributes its
+        addressable shards."""
+        x = np.asarray(x)
+        return jax.make_array_from_callback(x.shape, sharding,
+                                            lambda idx: x[idx])
+
     def _build_rowwise(self, graph: Graph, exec_mode: str, use_pallas: bool):
         """Jit the row-wise batched executable:
         (params, rep_table (U, ...), user_index (B,), cand (B, ...)) -> outs.
@@ -234,13 +310,23 @@ class ServingEngine:
         ``rep_table`` holds stage-1 outputs (two-stage) or raw user feeds
         (single-stage fallback); every entry is gathered per candidate row,
         so row b computes against user ``user_index[b]``'s representations.
+        With ``kernel_gather`` the entries feeding a Pallas ``mari_dense``
+        accumulator init skip the explicit gather — the kernel indexes the
+        stacked table by ``user_index`` at accumulator-init load time, so
+        the gathered (B, units) block never materializes.
         """
-        ex = Executor(graph, exec_mode, use_pallas=use_pallas)
+        ex = Executor(graph, exec_mode, use_pallas=use_pallas,
+                      kernel_gather=self.kernel_gather)
+        lazy = self.lazy_gather_inputs = ex.lazy_gather_inputs
 
         def fn(params, table, user_index, cand):
-            gathered = {k: jnp.take(v, user_index, axis=0)
+            gathered = {k: (v if k in lazy
+                            else jnp.take(v, user_index, axis=0))
                         for k, v in table.items()}
-            return ex.run(params, {**gathered, **cand})
+            feeds = {**gathered, **cand}
+            if lazy:
+                feeds[USER_INDEX_FEED] = user_index
+            return ex.run(params, feeds)
 
         kwargs = {}
         if self._in_shardings is not None:
@@ -251,9 +337,12 @@ class ServingEngine:
     # -- candidate mini-batching --------------------------------------------
     def _bucket(self, n: int) -> int:
         """Smallest power-of-two bucket >= n, clamped to
-        [min_bucket, max_batch] — every pool size maps onto a small, fixed
-        set of compiled shapes."""
-        return min(self.max_batch, _next_pow2(max(n, self.min_bucket)))
+        [min_bucket, max_batch] and kept a multiple of the shard count —
+        every pool size maps onto a small, fixed set of compiled shapes and
+        no shard receives a ragged tail (repro.dist.topology)."""
+        from repro.dist.topology import bucket_for
+        return bucket_for(n, self._n_shards, min_bucket=self.min_bucket,
+                          max_batch=self.max_batch)
 
     def _chunk(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
         """Split a candidate pool into raw (chunk, n_valid) pieces of at most
@@ -396,7 +485,12 @@ class ServingEngine:
             table = {k: jnp.concatenate([r[k] for r in padded], axis=0)
                      for k in slot_reps[0]}
 
-        uidx = np.zeros((bucket,), np.int32)   # padding rows point at slot 0
+        # padding rows duplicate the LAST real row exactly — its user slot
+        # here, its candidate row below — so pad scores are copies of a
+        # real score (a cross-user slot-0/tail-candidate combination could
+        # exceed max|real score| and inflate the compress_scores int8
+        # quantization scale past the verified error bound)
+        uidx = np.full((bucket,), pack_items[-1][1], np.int32)
         offset = 0
         for _, slot, _, n in pack_items:
             uidx[offset:offset + n] = slot
@@ -411,6 +505,17 @@ class ServingEngine:
                 xs.append(jnp.broadcast_to(tail, (pad,) + tail.shape[1:]))
             cand[k] = jnp.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
 
+        if self._multiproc:
+            # SPMD: every process holds the identical host values; lift
+            # them onto the cross-process mesh (replicated tables, sharded
+            # candidate rows + index)
+            repl, _, shard, _ = self._in_shardings
+            table = {k: self._globalize(v, repl) for k, v in table.items()}
+            cand = {k: self._globalize(v, shard) for k, v in cand.items()}
+            uidx_arr = self._globalize(uidx, shard)
+        else:
+            uidx_arr = jnp.asarray(uidx)
+
         # first call at a new (rep-table, bucket) signature compiles — that
         # is not a straggler, so hedging would only duplicate the compile
         first_shape = (u_pad, bucket) not in self._batch_shapes
@@ -420,20 +525,24 @@ class ServingEngine:
             self.coalesced_calls += 1
         if self._hedged is not None and not first_shape:
             out, outcome = self._hedged.run(
-                self.params, table, jnp.asarray(uidx), cand)
+                self._params_s2, table, uidx_arr, cand)
             hedged = int(outcome.hedged)
         else:
             tb = time.perf_counter()
-            out = self._dispatch(self.params, table, jnp.asarray(uidx), cand)
+            out = self._dispatch(self._params_s2, table, uidx_arr, cand)
             if not first_shape:   # compile latency would poison the window
                 self.hedge_policy.observe((time.perf_counter() - tb) * 1e3)
             hedged = 0
-        scores = np.asarray(jnp.concatenate(
-            [out[o] for o in self.outputs], axis=-1))[:total]
+        scores = np.concatenate(
+            [np.asarray(out[o]) for o in self.outputs], axis=-1)[:total]
         return scores, hedged
 
     def _dispatch(self, params, table, uidx, cand):
         out = self._stage2(params, table, uidx, cand)
+        if self._cgather is not None:
+            # opt-in int8 result collection: the only cross-shard movement
+            # of the step runs quantized (repro.dist.compress)
+            out = {k: self._cgather(v) for k, v in out.items()}
         jax.block_until_ready(out)
         return out
 

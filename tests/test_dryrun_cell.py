@@ -10,9 +10,6 @@ import jax
 import pytest
 
 
-@pytest.mark.skip(reason="pre-existing seed failure: repro.launch.dryrun "
-                         "imports repro.dist.sharding, and the repro.dist "
-                         "module is absent from the seed")
 def test_single_cell_dryrun_subprocess():
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")

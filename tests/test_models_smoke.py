@@ -21,9 +21,6 @@ LM_ARCHS = ["mixtral-8x7b", "granite-moe-3b-a800m", "deepseek-67b",
 RECSYS_ARCHS = ["dlrm-mlperf", "fm", "din", "deepfm", "paper-ranking"]
 
 
-@pytest.mark.skip(reason="pre-existing seed failure: the LM forward path "
-                         "imports repro.dist.sharding, and the repro.dist "
-                         "module is absent from the seed")
 @pytest.mark.parametrize("arch", LM_ARCHS)
 class TestLMSmoke:
     def test_forward_and_train_step(self, arch):
@@ -53,9 +50,6 @@ class TestLMSmoke:
         assert cache2["k"].shape == cache["k"].shape
 
 
-@pytest.mark.skip(reason="pre-existing seed failure: the LM decode path "
-                         "imports repro.dist.sharding, and the repro.dist "
-                         "module is absent from the seed")
 class TestMixtralSWA:
     def test_ring_buffer_decode_matches_full(self):
         """SWA ring-buffer decode == full-cache decode once past the window."""

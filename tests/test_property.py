@@ -107,10 +107,11 @@ def test_gca_color_invariants(segs):
     assert r.colors["out"] is Color.BLUE
 
 
-# only this property touches repro.dist (absent from the seed —
-# pre-existing); the MaRI losslessness properties above must still run
+# only this property touches repro.dist; the guard is vestigial now that
+# the subsystem exists (PR 3) — kept so the MaRI losslessness properties
+# above keep running even on a partial checkout
 @pytest.mark.skipif(importlib.util.find_spec("repro.dist") is None,
-                    reason="repro.dist absent from the seed")
+                    reason="repro.dist not importable")
 @given(arr=st.lists(st.floats(-1e3, 1e3, allow_nan=False, width=32),
                     min_size=1, max_size=64))
 @settings(**SETTINGS)

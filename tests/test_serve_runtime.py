@@ -395,3 +395,77 @@ class TestBatcherRuntime:
         b = CoalescingBatcher(eng, auto_start=False)
         with pytest.raises(RuntimeError):
             b.submit(_request(graph, user_in, 0, 10, seed=1))
+
+
+class _GatedSpyEngine:
+    """Engine stand-in recording dispatch order; the FIRST group blocks
+    until released, so requests submitted meanwhile pile up in the queue
+    and their pop order becomes observable."""
+    max_batch = 1 << 30
+
+    def __init__(self):
+        self.groups: list[list[int]] = []
+        self.gate = threading.Event()
+
+    def score_coalesced(self, reqs):
+        self.groups.append([r.user_id for r in reqs])
+        if len(self.groups) == 1:
+            self.gate.wait(timeout=30)
+        return [object()] * len(reqs)
+
+
+class TestDeadlineScheduling:
+    def test_deadline_request_jumps_queued_best_effort(self):
+        """A deadline-tagged request submitted AFTER older best-effort
+        ones is dispatched before them (priority pop, FIFO within class)."""
+        spy = _GatedSpyEngine()
+        req = lambda uid: ServeRequest(uid, {}, {"x": np.zeros((4, 2))})
+        b = CoalescingBatcher(spy, linger_ms=0.0, max_coalesce=1)
+        try:
+            blocker = b.submit(req(99))
+            for _ in range(300):             # worker holds group 1 open
+                if spy.groups:
+                    break
+                time.sleep(0.01)
+            assert spy.groups == [[99]]
+            futs = [b.submit(req(uid)) for uid in (1, 2, 3)]
+            futs.append(b.submit(req(9), slo="deadline"))
+            spy.gate.set()
+            for f in [blocker] + futs:
+                f.result(timeout=30)
+        finally:
+            spy.gate.set()
+            b.close()
+        # deadline request 9 overtook the older best-effort 1, 2, 3
+        assert spy.groups == [[99], [9], [1], [2], [3]]
+        assert b.deadline_requests == 1
+
+    def test_deadline_ms_implies_class_and_caps_linger(self):
+        spy = _GatedSpyEngine()
+        spy.gate.set()                       # never hold groups open
+        b = CoalescingBatcher(spy, linger_ms=100.0, auto_start=False)
+        from repro.serve.batcher import _PRIO, _Item, SLO_DEADLINE
+        now = time.perf_counter()
+        # deadline class shrinks the linger window to linger * frac
+        it = _Item(prio=_PRIO[SLO_DEADLINE], seq=1)
+        assert b._linger_until(it, now) - now == pytest.approx(
+            0.1 * b.deadline_linger_frac, rel=1e-6)
+        # a near-expiry deadline caps it further
+        it2 = _Item(prio=_PRIO[SLO_DEADLINE], seq=2, deadline_at=now + 0.001)
+        assert b._linger_until(it2, now) - now == pytest.approx(0.001,
+                                                                rel=1e-6)
+        # best-effort keeps the full linger
+        it3 = _Item(prio=1, seq=3)
+        assert b._linger_until(it3, now) - now == pytest.approx(0.1,
+                                                                rel=1e-6)
+
+    def test_bad_slo_rejected(self):
+        spy = _GatedSpyEngine()
+        spy.gate.set()
+        b = CoalescingBatcher(spy, linger_ms=0.0)
+        try:
+            with pytest.raises(ValueError, match="SLO"):
+                b.submit(ServeRequest(0, {}, {"x": np.zeros((2, 2))}),
+                         slo="gold-plated")
+        finally:
+            b.close()

@@ -130,12 +130,7 @@ class TestCheckpoint:
             restore_pytree({"w": jnp.zeros((3, 3))}, str(tmp_path / "ck"))
 
 
-_DIST_ABSENT = pytest.mark.skip(
-    reason="pre-existing seed failure: repro.dist module absent from the seed")
-
-
 class TestShardingRules:
-    @_DIST_ABSENT
     def test_lm_pspecs_cover_tree(self):
         from repro import configs as cfgreg
         from repro.dist.sharding import lm_param_pspecs, zero1_pspecs
@@ -166,7 +161,6 @@ class TestShardingRules:
             assert cfg.vocab_padded % 256 == 0
             assert cfg.vocab_padded >= cfg.vocab
 
-    @_DIST_ABSENT
     def test_recsys_big_tables_sharded(self):
         from repro import configs as cfgreg
         from repro.dist.sharding import recsys_param_pspecs
@@ -177,7 +171,6 @@ class TestShardingRules:
         assert big[0] == "model" and small[0] is None
 
 
-@_DIST_ABSENT
 class TestGradientCompression:
     def test_compressed_psum_unbiased_over_steps(self):
         """Error feedback: accumulated compressed sums converge to the true
