@@ -48,11 +48,23 @@ def main():
     user_in = {n.name for n in graph.input_nodes()
                if n.attrs.get("domain") == "user"}
 
+    # user features are a function of the USER, not the request: the
+    # rep-cache contract says one (user_id, feature_version) key maps to
+    # one feature set. (The single-stage vani engine no longer caches raw
+    # feeds, so a stream violating this would let vani see per-request
+    # features while uoi/mari serve cached reps — stale-cache semantics,
+    # not a paradigm difference.)
+    user_feeds = {}
+
     def make_request(r, key, candidates):
+        uid = r % args.users
         feeds = make_recsys_feeds(graph, candidates, key)
+        if uid not in user_feeds:
+            user_feeds[uid] = {k2: v for k2, v in feeds.items()
+                               if k2 in user_in}
         return ServeRequest(
-            user_id=r % args.users,
-            user_feeds={k2: v for k2, v in feeds.items() if k2 in user_in},
+            user_id=uid,
+            user_feeds=user_feeds[uid],
             candidate_feeds={k2: v for k2, v in feeds.items()
                              if k2 not in user_in})
 

@@ -33,6 +33,11 @@ every candidate in the batch. ``split_two_stage`` cuts a graph into:
   serving engine's coalescing runtime uses the row-wise form;
   ``boundary_specs`` gives the per-example shape of every crossing value so
   the runtime can stack/pad rep tables without re-running shape inference.
+  Under the engine's gather-at-load options (``kernel_gather``,
+  ``gather_attention``) eligible user inputs skip the explicit gather
+  entirely: the stacked (U, ...) table is fed as-is and the consuming
+  kernel (Pallas ``mari_matmul`` acc-init / ``kernels.gather_einsum``
+  attention contractions) indexes it by ``user_index`` at load time.
 
 Both stages share ONE params dict: partial nodes reference their source
 node's params via ``attrs["param_of"]`` indirection, so no weight is copied
@@ -47,6 +52,24 @@ import dataclasses
 
 from repro.core.gca import Color, GCAResult, run_gca
 from repro.graph.ir import Graph, Node, infer_shapes
+
+
+def rep_table_pspecs(boundary_specs: dict) -> dict:
+    """Rank-matched replicated PartitionSpecs for the stacked (U, ...)
+    stage-2 rep tables: 1 table dim + per-example rank, every dim
+    unsharded. THE single source of the rep-table sharding contract
+    (re-exported by ``repro.dist.sharding`` for serving-side callers).
+
+    User representations replicate across candidate shards because every
+    shard scores rows for every user — and with the gather-at-load serving
+    path (``kernel_gather`` / ``gather_attention``) replication is the
+    whole cross-shard story: each shard indexes its replicated (U, ...)
+    table by its own slice of ``user_index`` inside the contraction, so no
+    (B, ...)-sized gathered user block — in particular no (B, L, D, h)
+    attention tensor — is ever formed, let alone all-gathered."""
+    from jax.sharding import PartitionSpec as P
+    return {name: P(*([None] * (1 + len(shape))))
+            for name, shape in boundary_specs.items()}
 
 
 @dataclasses.dataclass
@@ -69,14 +92,9 @@ class TwoStageSplit:
                 f"stage2 {len(self.stage2.nodes)} nodes")
 
     def boundary_pspecs(self) -> dict:
-        """Rank-matched replicated PartitionSpecs for the stacked (U, ...)
-        rep tables — user representations replicate across candidate
-        shards (every shard scores rows for every user), which is the
-        stage-2 sharding contract of ``repro.dist.sharding
-        .candidate_pspecs``. Rank = 1 (table dim) + per-example rank."""
-        from jax.sharding import PartitionSpec as P
-        return {name: P(*([None] * (1 + len(shape))))
-                for name, shape in self.boundary_specs.items()}
+        """Per-entry specs for this split's stacked rep tables — the
+        ``rep_table_pspecs`` contract over ``boundary_specs``."""
+        return rep_table_pspecs(self.boundary_specs)
 
 
 def _split_mari_dense(n: Node, pre: set[str]) -> tuple[Node, list[Node]]:

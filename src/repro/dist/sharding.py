@@ -205,13 +205,21 @@ def gnn_state_pspecs(params_shapes) -> dict:
 # Serving stage 2 — candidate-axis sharding over a 'cand' mesh
 # ---------------------------------------------------------------------------
 
+# Serving-side re-export: the stage-2 rep-table contract (stacked (U, ...)
+# tables, rank-matched replication; the gather-at-load path makes this the
+# whole cross-shard story — see its docstring) is owned by the core split
+# module, the layer that defines the boundary itself.
+from repro.core.split import rep_table_pspecs  # noqa: E402,F401
+
+
 def candidate_pspecs(mesh: Mesh, *, replicate_out: bool | None = None
                      ) -> tuple[tuple, object]:
     """(in_shardings, out_shardings) for the row-wise stage-2 executable
     ``fn(params, rep_table, user_index, candidate_feeds) -> outs``.
 
     Params and the stacked (U, ...) user-rep tables replicate (they are
-    small and every shard needs every user); the per-row user index and
+    small and every shard needs every user — ``rep_table_pspecs`` gives the
+    per-entry rank-matched form); the per-row user index and
     the candidate feeds shard over 'cand'; each device scores its candidate
     rows with zero in-flight collectives.
 

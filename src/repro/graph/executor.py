@@ -35,9 +35,14 @@ from repro.nn.attention import cross_attention
 
 # Reserved feed key: per-candidate-row user index for kernel-side gather.
 # When present, input nodes listed in ``Executor.lazy_gather_inputs``
-# receive their STACKED (U, ...) rep table as the fed value and the Pallas
-# mari_matmul kernel gathers row ``user_index[b]`` at accumulator-init load
-# time — the gathered (B, units) block never materializes.
+# receive their STACKED (U, ...) rep table as the fed value and the gather
+# moves into the consuming kernel: the Pallas mari_matmul indexes the
+# (U, units) table at accumulator-init load, and the decomposed-attention
+# contractions run through ``kernels.gather_einsum`` — the gathered
+# (B, units) / (B, L, D, h) blocks never materialize. Out-of-range indices
+# (padded batch rows) clamp everywhere (``mode="clip"``): they read a real
+# user's reps instead of wrapping or going NaN, and their rows are sliced
+# off by the serving engine like every other padded row.
 USER_INDEX_FEED = "__user_index__"
 
 
@@ -198,7 +203,9 @@ def _run_mari_dense(node: Node, params: dict, vals: dict, *,
                                         activation=activation,
                                         interpret=interpret)
     if user_index is not None and acc0 is not None:
-        acc0 = jnp.take(acc0, user_index, axis=0)   # jnp fallback: gather
+        # jnp fallback: explicit gather; clip so a padded row's index can
+        # never wrap to an arbitrary slot or NaN-poison the row
+        acc0 = jnp.take(acc0, user_index, axis=0, mode="clip")
     acc = acc0
     for x, w in parts:
         y = x @ w
@@ -213,7 +220,7 @@ class Executor:
 
     def __init__(self, graph: Graph, mode: str = "uoi", *,
                  use_pallas: bool = False, pallas_interpret: bool | None = None,
-                 kernel_gather: bool = False):
+                 kernel_gather: bool = False, gather_attention: bool = False):
         if mode not in ("vani", "uoi"):
             raise ValueError(f"mode must be 'vani' or 'uoi', got {mode!r}")
         self.graph = graph
@@ -224,30 +231,67 @@ class Executor:
         if pallas_interpret is None:
             pallas_interpret = jax.default_backend() != "tpu"
         self.pallas_interpret = pallas_interpret
+        self.gather_attention = gather_attention
         self._user_inputs = {
             n.name for n in graph.input_nodes() if n.attrs.get("domain") == "user"
         }
-        # kernel-side gather: user-side inputs consumed ONLY as a Pallas
-        # mari_dense accumulator init may be fed as stacked (U, units) rep
-        # tables + a USER_INDEX_FEED row index; the kernel gathers at
-        # accumulator-init load. Any other consumer needs the materialized
-        # row-wise value, so such inputs stay on the explicit-gather path.
+        # Gather-at-load: user-side inputs whose EVERY consumption is
+        # gather-capable may be fed as stacked (U, ...) rep tables + a
+        # USER_INDEX_FEED row index, and the consuming op indexes the table
+        # inside its contraction instead of receiving a pre-gathered
+        # row-wise value. Two consumer kinds qualify:
+        #
+        # * a Pallas ``mari_dense`` accumulator init (``kernel_gather``):
+        #   the kernel gathers the (U, units) table at acc-init load;
+        # * a decomposed+precomputed ``target_attention`` operand
+        #   (``gather_attention``): keys / u_part / T (and the mask) are
+        #   indexed by ``kernels.gather_einsum`` inside the attention
+        #   contractions, so the (B, L, D, h)-class gathered blocks never
+        #   materialize.
+        #
+        # Any other consumer needs the materialized row-wise value, so such
+        # inputs stay on the explicit-gather path.
         self.lazy_gather_inputs: frozenset[str] = frozenset()
-        if kernel_gather and use_pallas:
+        allow_md = kernel_gather and use_pallas
+        if allow_md or gather_attention:
             lazy = set()
             for n in graph.input_nodes():
                 if n.attrs.get("domain") != "user":
                     continue
                 cons = graph.consumers(n.name)
                 if cons and all(
-                        c.op == "mari_dense"
-                        and c.attrs.get("precomputed_user")
-                        and not c.attrs.get("cast_dtype")
-                        and c.inputs[0] == n.name
-                        and c.inputs.count(n.name) == 1
+                        (allow_md and self._is_md_acc_init(c, n.name))
+                        or (gather_attention
+                            and self._is_attn_operand(c, n.name))
                         for c in cons):
                     lazy.add(n.name)
             self.lazy_gather_inputs = frozenset(lazy)
+
+    @staticmethod
+    def _is_md_acc_init(c: Node, name: str) -> bool:
+        """``name`` feeds ``c`` only as a Pallas-eligible mari_dense
+        accumulator init (the mixed-precision path keeps jnp)."""
+        return (c.op == "mari_dense"
+                and c.attrs.get("precomputed_user")
+                and not c.attrs.get("cast_dtype")
+                and c.inputs[0] == name
+                and c.inputs.count(name) == 1)
+
+    @staticmethod
+    def _is_attn_operand(c: Node, name: str) -> bool:
+        """``name`` feeds ``c`` only in gather-capable positions of a
+        decomposed, precomputed target_attention: keys (1), u_part (-2),
+        T (-1), and the mask (2) when present. The query (0) is
+        candidate-side by construction and never qualifies."""
+        if not (c.op == "target_attention" and c.attrs.get("decomposed")
+                and c.attrs.get("precomputed")):
+            return False
+        k = len(c.inputs)
+        allowed = {1, k - 2, k - 1}
+        if c.attrs.get("has_mask"):
+            allowed.add(2)
+        return all(i in allowed
+                   for i, s in enumerate(c.inputs) if s == name)
 
     def run(self, params: dict, feeds: Mapping[str, Array]) -> dict[str, Array]:
         vals: dict[str, Array] = {}
@@ -262,6 +306,18 @@ class Executor:
 
     def __call__(self, params, feeds):
         return self.run(params, feeds)
+
+    def _gather_einsum(self, spec, x, table, uidx) -> Array:
+        """Contract ``x`` against the stacked ``(U, ...)`` table, indexed
+        per row by ``uidx`` — Pallas kernel when enabled, jnp.take oracle
+        otherwise (bit-identical semantics; only the memory profile
+        differs)."""
+        if self.use_pallas:
+            from repro.kernels.gather_einsum import gather_einsum
+            return gather_einsum(spec, x, table, uidx,
+                                 interpret=self.pallas_interpret)
+        from repro.kernels.gather_einsum import gather_einsum_ref
+        return gather_einsum_ref(spec, x, table, uidx)
 
     # ------------------------------------------------------------------
     def _eval(self, n: Node, params, vals, feeds, batch: int) -> Array:
@@ -355,13 +411,26 @@ class Executor:
                 # the (B, L, 4D) feature tensor never materializes and the
                 # broadcast einsums realize the deferred tile) OR batch B
                 # (row-wise: a cross-user coalesced batch where row b holds
-                # user b's gathered tensors).
+                # user b's gathered tensors) OR — gather-aware serving —
+                # arrive as stacked (U, ...) rep tables alongside a
+                # USER_INDEX_FEED, in which case the per-row gather folds
+                # into the contractions (kernels.gather_einsum) and the
+                # (B, L, D, h)-class gathered blocks never materialize.
                 l0 = p["layer_0"]
+                uidx = vals.get(USER_INDEX_FEED)
+
+                def stacked(name: str) -> bool:
+                    return uidx is not None and name in self.lazy_gather_inputs
+
+                t_stacked = u_stacked = k_stacked = False
                 if n.attrs.get("precomputed"):
                     # Two-stage serving: one-shot tensors arrive from stage 1
                     # (core.split) — bias is folded into u_part there.
-                    u_part = ins[-2]                    # (1|B, L, h)
-                    t = ins[-1]                         # (1|B, L, D, h)
+                    u_part = ins[-2]                    # (1|B|U, L, h)
+                    t = ins[-1]                         # (1|B|U, L, D, h)
+                    u_stacked = stacked(n.inputs[-2])
+                    t_stacked = stacked(n.inputs[-1])
+                    k_stacked = stacked(n.inputs[1])
                 else:
                     if keys.shape[0] == 1:
                         u_part = (keys[0] @ l0["w_kd"] + l0["b"])[None]
@@ -369,14 +438,24 @@ class Executor:
                     else:                               # row-wise keys
                         u_part = keys @ l0["w_kd"] + l0["b"]
                         t = keys[..., None] * l0["w_p"][None, None]
+                if n.attrs.get("has_mask") and stacked(n.inputs[2]):
+                    mask = jnp.take(mask, uidx, axis=0, mode="clip")
+                elif not n.attrs.get("has_mask") and k_stacked:
+                    # the default all-ones mask above took its shape from
+                    # the STACKED keys (U, L): re-shape to broadcast (1, L)
+                    mask = jnp.ones((1,) + keys.shape[1:-1], bool)
                 q_part = q @ l0["w_qd"]                 # (B, h)
-                if t.shape[0] == 1 and q.shape[0] != 1:
+                if t_stacked:
+                    p_part = self._gather_einsum("bd,uldh->blh", q, t, uidx)
+                elif t.shape[0] == 1 and q.shape[0] != 1:
                     p_part = jnp.einsum("bd,ldh->blh", q, t[0])
-                    h = jax.nn.relu(u_part[0][None] + q_part[:, None, :]
-                                    + p_part)
                 else:
                     p_part = jnp.einsum("bd,bldh->blh", q, t)
-                    h = jax.nn.relu(u_part + q_part[:, None, :] + p_part)
+                if u_stacked:
+                    # (B, L, h) exists anyway as the relu output below, so
+                    # an explicit (clamped) gather costs nothing extra
+                    u_part = jnp.take(u_part, uidx, axis=0, mode="clip")
+                h = jax.nn.relu(u_part + q_part[:, None, :] + p_part)
                 for li in range(1, nlayers):
                     h = dense_apply(p[f"layer_{li}"], h)
                     if li < nlayers - 1:
@@ -384,6 +463,8 @@ class Executor:
                 scores = h[..., 0]                      # (B, L)
                 scores = jnp.where(mask, scores, -1e30)
                 w = jax.nn.softmax(scores, axis=-1)
+                if k_stacked:
+                    return self._gather_einsum("bl,uld->bd", w, keys, uidx)
                 if keys.shape[0] == 1 and w.shape[0] != 1:
                     return jnp.einsum("bl,ld->bd", w, keys[0])
                 return jnp.einsum("bl,bld->bd", w, keys)

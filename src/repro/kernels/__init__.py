@@ -4,10 +4,18 @@ Each subpackage ships: ``kernel.py`` (pl.pallas_call + explicit BlockSpec
 VMEM tiling), ``ops.py`` (jit'd public wrapper, padding/fallback logic) and
 ``ref.py`` (pure-jnp oracle used by the allclose test sweeps). Kernels are
 validated on CPU with ``interpret=True``; TPU is the compile target.
+
+See ``README.md`` in this package for the gather-at-load convention shared
+by ``mari_matmul`` (kernel_gather accumulator init) and ``gather_einsum``
+(attention-side contractions over stacked (U, ...) rep tables).
 """
 from repro.kernels.mari_matmul.ops import (  # noqa: F401
     mari_matmul_fused,
     mari_matmul_fused_groups,
+)
+from repro.kernels.gather_einsum import (  # noqa: F401
+    gather_einsum,
+    gather_einsum_ref,
 )
 from repro.kernels.embedding_bag.ops import embedding_bag  # noqa: F401
 from repro.kernels.dot_interaction.ops import dot_interaction  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.kernels.gather_einsum.ops import gather_einsum  # noqa: F401
+from repro.kernels.gather_einsum.ref import gather_einsum_ref  # noqa: F401

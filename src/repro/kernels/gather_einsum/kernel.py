@@ -1,0 +1,121 @@
+"""Gather-aware einsum as a TPU Pallas kernel.
+
+Cross-user coalesced serving hands stage 2 a stacked ``(U, ...)`` user-rep
+table plus a per-row ``user_index``; the materializing path gathers the
+table to ``(B, ...)`` before every contraction, which at coalesced batch
+sizes re-creates exactly the HBM traffic MaRI's one-shot tensors were
+built to avoid (for reparam DIN the gathered ``T`` block is ``(B, L, D, h)``).
+This kernel family folds the gather into the contraction: each row tile
+loads its rows from the VMEM-resident table at contraction time, so the
+gathered ``(B, ...)`` operand never exists in HBM.
+
+Supported specs are the decomposed-attention contractions — the first
+operand is per-row (leading ``b``), the second is the stacked table
+(leading ``u``), and the output is per-row:
+
+* ``"bd,uldh->blh"`` — q against the one-shot tensor ``T``;
+* ``"bl,uld->bd"``   — attention weights against the boundary keys;
+* ``"blh,uh->bl"``   — per-row contraction against a per-user vector table.
+
+Grid: 1-D over row tiles of ``bm`` rows. Per step the kernel holds the x
+tile ``(bm, ...)``, the FULL table ``(U, ...)`` and the tile's indices
+``(bm, 1)`` in VMEM; ``U`` is the pow2-padded user-slot count of one
+coalesced batch (small by construction — ``max_users_per_batch``), so the
+table tile is the whole memory footprint and it is shared across row tiles.
+Row results depend only on ``x[b]`` and ``table[idx[b]]`` — not on ``U``,
+``B``, or the tile packing — which is what makes a single request (U=1)
+bit-identical to the coalesced path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def parse_spec(spec: str) -> tuple[str, str, str, str]:
+    """Validate a gather-einsum spec; returns (x_sub, t_sub, out_sub,
+    row_spec) where ``row_spec`` is the per-row einsum after the gather
+    (``u`` replaced by ``b``)."""
+    try:
+        lhs, out = spec.split("->")
+        x_sub, t_sub = lhs.split(",")
+    except ValueError:
+        raise ValueError(f"gather_einsum spec must be 'b...,u...->b...', "
+                         f"got {spec!r}") from None
+    if not (x_sub.startswith("b") and t_sub.startswith("u")
+            and out.startswith("b")):
+        raise ValueError(
+            f"gather_einsum spec {spec!r}: first operand must lead with the "
+            f"row dim 'b', the table with the user dim 'u', the output with "
+            f"'b'")
+    if "u" in x_sub or "u" in out or "b" in t_sub:
+        raise ValueError(f"gather_einsum spec {spec!r}: 'u' lives only on "
+                         f"the table operand, 'b' never does")
+    for sub in (x_sub, t_sub, out):
+        if len(set(sub)) != len(sub):
+            raise ValueError(f"gather_einsum spec {spec!r}: repeated dim "
+                             f"in {sub!r}")
+    if not set(out[1:]) <= set(x_sub[1:]) | set(t_sub[1:]):
+        raise ValueError(f"gather_einsum spec {spec!r}: output dim not "
+                         f"present in any operand")
+    return x_sub, t_sub, out, f"{x_sub},b{t_sub[1:]}->{out}"
+
+
+def _kernel(x_ref, t_ref, idx_ref, o_ref, *, row_spec):
+    # Gather-at-load: this tile's rows of the stacked table, straight from
+    # the VMEM-resident (U, ...) block — (B, ...) never exists in HBM.
+    idx = idx_ref[...][:, 0]
+    rows = jnp.take(t_ref[...], idx, axis=0)
+    o_ref[...] = jnp.einsum(
+        row_spec, x_ref[...], rows,
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("spec", "bm", "interpret"))
+def gather_einsum_kernel(spec, x, table, user_index, *, bm=256,
+                         interpret=False):
+    """``einsum(spec, x, table[user_index])`` with the gather fused into the
+    row-tile load.
+
+    ``x`` is ``(B, ...)``, ``table`` the stacked ``(U, ...)`` rep table,
+    ``user_index`` the ``(B,)`` int32 row->user map (caller guarantees
+    in-range values and ``B % bm == 0`` — ops.py clamps and pads).
+    """
+    x_sub, t_sub, out_sub, row_spec = parse_spec(spec)
+    if x.ndim != len(x_sub) or table.ndim != len(t_sub):
+        raise ValueError(f"gather_einsum {spec!r}: operand ranks "
+                         f"{x.shape}/{table.shape} do not match the spec")
+    B = x.shape[0]
+    if user_index.shape != (B,):
+        raise ValueError(f"user_index must be ({B},), got {user_index.shape}")
+    assert B % bm == 0, (B, bm)
+    sizes = {c: s for c, s in zip(x_sub, x.shape)}
+    for c, s in zip(t_sub, table.shape):
+        if sizes.setdefault(c, s) != s:
+            raise ValueError(f"gather_einsum {spec!r}: dim {c!r} is "
+                             f"{sizes[c]} on x but {s} on the table")
+    out_shape = tuple(sizes[c] for c in out_sub)
+    out_tail = out_shape[1:]
+    idx2d = user_index.astype(jnp.int32).reshape(B, 1)
+
+    x_tail = x.shape[1:]
+    zeros = lambda n: (0,) * n
+    return pl.pallas_call(
+        functools.partial(_kernel, row_spec=row_spec),
+        grid=(B // bm,),
+        in_specs=[
+            pl.BlockSpec((bm,) + x_tail,
+                         lambda i: (i,) + zeros(len(x_tail))),   # x tile
+            pl.BlockSpec(table.shape,
+                         lambda i: zeros(table.ndim)),  # whole stacked table
+            pl.BlockSpec((bm, 1), lambda i: (i, 0)),             # row indices
+        ],
+        out_specs=pl.BlockSpec((bm,) + out_tail,
+                               lambda i: (i,) + zeros(len(out_tail))),
+        out_shape=jax.ShapeDtypeStruct(out_shape, x.dtype),
+        interpret=interpret,
+    )(x, table, idx2d)

@@ -1,0 +1,53 @@
+"""Public gather-aware einsum op: clamp the index, pad the row dim to the
+tile size, dispatch the Pallas kernel, slice back.
+
+``gather_einsum(spec, x, table, user_index)`` computes
+``einsum(spec, x, table[user_index])`` for specs of the form
+``"b...,u...->b..."`` WITHOUT materializing the gathered ``(B, ...)``
+operand — the kernel indexes the stacked ``(U, ...)`` table at row-tile
+load time. ``gather_einsum_ref`` (ref.py) is the jnp.take-based oracle and
+the executor's non-Pallas fallback.
+
+Index contract (shared with ``mari_matmul``'s kernel-gather path):
+
+* ``user_index`` is ``(B,)`` integer, row ``b`` reads ``table[user_index[b]]``;
+* out-of-range values CLAMP to ``[0, U-1]`` — matching the reference's
+  ``mode="clip"`` — so a garbage index in a padded row can never wrap to an
+  arbitrary user or poison the row with NaN;
+* rows added here to pad ``B`` up to the tile size index slot 0; their
+  outputs are sliced off before returning.
+
+Only the row dim is padded: the table/feature dims ride through at their
+natural sizes, which is exact for interpret mode (the validation target —
+see ``kernels/README.md``); the Mosaic alignment sweep for compiled TPU is
+tracked in ROADMAP "Next (kernels)".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import round_up
+from repro.kernels.gather_einsum.kernel import gather_einsum_kernel
+
+_BLOCK_B = 256
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "interpret"))
+def gather_einsum(spec, x, table, user_index, *, interpret=True):
+    """``einsum(spec, x, table[user_index])``, gather fused into the kernel.
+
+    interpret=True on CPU (validation); False on real TPU.
+    """
+    B = x.shape[0]
+    bm = min(_BLOCK_B, round_up(B, 8))
+    Bp = round_up(B, bm)
+    idx = jnp.clip(user_index.astype(jnp.int32), 0, table.shape[0] - 1)
+    if Bp != B:
+        x = jnp.pad(x, ((0, Bp - B),) + ((0, 0),) * (x.ndim - 1))
+        idx = jnp.pad(idx, (0, Bp - B))      # padding rows index slot 0
+    out = gather_einsum_kernel(spec, x, table, idx, bm=bm,
+                               interpret=interpret)
+    return out[:B]

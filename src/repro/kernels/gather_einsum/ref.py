@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the gather-aware einsum: materialize the gathered
+``(B, ...)`` operand with ``jnp.take`` and contract. This IS the memory
+profile the kernel removes — it exists for the allclose sweeps and as the
+executor's fallback when the Pallas path is off.
+
+Out-of-range indices clamp (``mode="clip"``): bucketed serving batches pad
+``user_index`` alongside the candidate rows, and a padding row that wrapped
+(numpy) or poisoned the row with NaN (jax's default ``fill``) would be a
+silent correctness hazard. Clamped padding rows read a real user's reps and
+their scores are sliced off by the caller, exactly like every other padded
+row.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.gather_einsum.kernel import parse_spec
+
+
+def gather_einsum_ref(spec, x, table, user_index):
+    """``einsum(spec, x, table[user_index])`` via an explicit gather."""
+    _, _, _, row_spec = parse_spec(spec)
+    rows = jnp.take(table, user_index, axis=0, mode="clip")
+    return jnp.einsum(row_spec, x, rows)

@@ -69,7 +69,8 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None, user_index=None,
     if not rest:  # no batched stream left: acc-init row/block IS the output
         out = _EPILOGUES[activation](u)
         if user_index is not None and acc0 is not None:
-            out = jnp.take(out, user_index, axis=0)
+            # clip: a padded row's index must read a real slot, not wrap/NaN
+            out = jnp.take(out, user_index, axis=0, mode="clip")
         return out.astype(parts[0][0].dtype)
 
     B = max(x.shape[0] for x, _ in rest)
@@ -88,9 +89,11 @@ def mari_matmul_fused_groups(parts, b=None, *, acc0=None, user_index=None,
     xp = jnp.pad(x_rest, ((0, Bp - B), (0, Drp - Dr)))
     wp = jnp.pad(w_rest, ((0, Drp - Dr), (0, dp - d)))
     if user_index is not None and acc0 is not None:
-        # table layout (U, d): pad columns only; pad rows index slot 0
+        # table layout (U, d): pad columns only; pad rows index slot 0 and
+        # out-of-range indices clamp (same contract as kernels.gather_einsum)
         up = jnp.pad(u, ((0, 0), (0, dp - d)))
-        idx = jnp.pad(user_index.astype(jnp.int32), (0, Bp - B))
+        idx = jnp.clip(user_index.astype(jnp.int32), 0, acc0.shape[0] - 1)
+        idx = jnp.pad(idx, (0, Bp - B))
         out = mari_matmul_kernel_gather(xp, wp, up, idx, bm=bm, bn=bn,
                                         bk=bk, activation=activation,
                                         interpret=interpret)

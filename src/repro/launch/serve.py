@@ -23,6 +23,17 @@ def main():
     ap.add_argument("--candidates", type=int, default=2048)
     ap.add_argument("--max-batch", type=int, default=1024)
     ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--reparam-attention", action="store_true",
+                    help="mari: also re-parameterize eligible "
+                         "target_attention units (beyond-paper rewrite)")
+    ap.add_argument("--gather-attention", action="store_true",
+                    help="consume decomposed-attention boundary tensors as "
+                         "stacked (U, ...) tables indexed inside the "
+                         "contractions (gather-at-load; pairs with "
+                         "--reparam-attention)")
+    ap.add_argument("--use-pallas", action="store_true",
+                    help="route mari_dense + gather_einsum through the "
+                         "Pallas kernels (interpret mode off-TPU)")
     args = ap.parse_args()
 
     from repro import configs as cfgreg
@@ -31,7 +42,10 @@ def main():
     graph, *_ = build()
     params = init_graph_params(graph, jax.random.PRNGKey(0))
     engine = ServingEngine(graph, params, mode=args.mode,
-                           max_batch=args.max_batch)
+                           max_batch=args.max_batch,
+                           reparam_attention=args.reparam_attention,
+                           gather_attention=args.gather_attention,
+                           use_pallas=args.use_pallas)
     if engine.conversion:
         print("[serve] MaRI rewrote:",
               [r.dense for r in engine.conversion.rewrites])

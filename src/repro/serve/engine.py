@@ -42,7 +42,14 @@ Knobs beyond the seed engine:
   sees a ragged tail;
 * ``kernel_gather`` — with ``use_pallas``, skip materializing the gathered
   row-wise ``mari_dense`` partials: the Pallas kernel indexes the stacked
-  (U, units) rep table by ``user_index`` at accumulator-init load time.
+  (U, units) rep table by ``user_index`` at accumulator-init load time;
+* ``gather_attention`` — the same gather-at-load discipline for the
+  attention-side user tensors: stage-2 boundary keys / ``u_part`` / ``T``
+  of a decomposed (reparam) ``target_attention`` stay stacked ``(U, ...)``
+  and ``kernels.gather_einsum`` indexes them by ``user_index`` inside the
+  contractions, so stage-2 peak memory scales with ``U·L·D·h + B·d``
+  instead of ``B·L·D·h`` (with ``use_pallas``; the jnp fallback keeps the
+  identical scores with the materializing memory profile).
 """
 from __future__ import annotations
 
@@ -130,6 +137,7 @@ class ServingEngine:
                  shard_candidates: bool | int = False,
                  compress_scores: bool = False,
                  kernel_gather: bool = False,
+                 gather_attention: bool = False,
                  hedging: bool = True,
                  hedge_policy: HedgePolicy | None = None,
                  max_users_per_batch: int = 8):
@@ -248,10 +256,10 @@ class ServingEngine:
                 # boundary contract (per-entry rank-matched replication)
                 # rather than a blanket spec — the table dict keys are
                 # exactly the boundary names
-                from repro.dist.sharding import named
+                from repro.dist.sharding import named, rep_table_pspecs
                 self._in_shardings = (
                     self._in_shardings[0],
-                    named(self.mesh, split.boundary_pspecs()),
+                    named(self.mesh, rep_table_pspecs(split.boundary_specs)),
                     self._in_shardings[2], self._in_shardings[3])
         else:
             self.split = None
@@ -262,6 +270,10 @@ class ServingEngine:
         if precat_weights:
             self.params = _precat_mari_weights(batched_graph, self.params)
         self.kernel_gather = kernel_gather and use_pallas
+        # gather-aware attention works with or without Pallas: the executor
+        # falls back to the jnp.take oracle off-TPU, so scores are identical
+        # either way — only the memory profile needs the kernel
+        self.gather_attention = gather_attention
         self._stage2 = self._build_rowwise(batched_graph, exec_mode,
                                            use_pallas)
         # multi-process: stage 2 consumes params as a globalized replica on
@@ -286,7 +298,11 @@ class ServingEngine:
         self.stage2_calls = 0                 # total row-wise dispatches
         self.coalesced_calls = 0              # dispatches mixing >1 user slot
         self._batch_shapes: set[tuple[int, int]] = set()  # (U_pad, bucket)
-        self.cache_user_reps = cache_user_reps
+        # single-stage serving has no stage-1 outputs to reuse — the
+        # "representation" is the raw feed dict, rebuilt per request — so
+        # cache get/put there is pure bookkeeping overhead on the hot path
+        # (BENCH_serve showed vani hit at 0.97x of cold); make it a no-op
+        self.cache_user_reps = cache_user_reps and self.two_stage
         self.cache = UserRepCache(max_users=max_cached_users)
         self.hedge_policy = hedge_policy or HedgePolicy()
         self.hedging = hedging
@@ -313,15 +329,23 @@ class ServingEngine:
         With ``kernel_gather`` the entries feeding a Pallas ``mari_dense``
         accumulator init skip the explicit gather — the kernel indexes the
         stacked table by ``user_index`` at accumulator-init load time, so
-        the gathered (B, units) block never materializes.
+        the gathered (B, units) block never materializes. With
+        ``gather_attention`` the same applies to the decomposed-attention
+        boundary tensors (keys / u_part / T): ``kernels.gather_einsum``
+        indexes the stacked tables inside the contractions.
         """
         ex = Executor(graph, exec_mode, use_pallas=use_pallas,
-                      kernel_gather=self.kernel_gather)
+                      kernel_gather=self.kernel_gather,
+                      gather_attention=self.gather_attention)
         lazy = self.lazy_gather_inputs = ex.lazy_gather_inputs
 
         def fn(params, table, user_index, cand):
+            # clip: padded rows carry a synthesized index (see _run_pack);
+            # clamping guarantees even a garbage value reads a real slot
+            # instead of wrapping (numpy) or NaN-filling (jax default)
             gathered = {k: (v if k in lazy
-                            else jnp.take(v, user_index, axis=0))
+                            else jnp.take(v, user_index, axis=0,
+                                          mode="clip"))
                         for k, v in table.items()}
             feeds = {**gathered, **cand}
             if lazy:
@@ -386,8 +410,9 @@ class ServingEngine:
             self.stage1_calls += 1
             ms = (time.perf_counter() - t0) * 1e3
         else:
-            # single-stage: the "representation" is the raw user feed dict —
-            # cached so repeat users skip host-side feed handling
+            # single-stage: the "representation" is the raw user feed dict
+            # (never cached — cache_user_reps is forced off above: there is
+            # nothing to reuse, so cache bookkeeping was pure overhead)
             reps, ms = dict(req.user_feeds), 0.0
         if self.cache_user_reps:
             self.cache.put(key, reps)
@@ -410,6 +435,13 @@ class ServingEngine:
             infos.append(_ReqInfo(
                 reps=reps, hit=hit, stage1_ms=s1ms,
                 chunks=self._chunk(req.candidate_feeds),
+                # slot dedup follows the cache: with it on, every request
+                # with one (user, version) key resolves to the SAME cached
+                # reps, so they can share a rep-table slot. Without a cache
+                # (incl. single-stage engines) reps are per-request values
+                # with no canonical copy per key — per-request slots keep
+                # coalesced == per-request bit-identity unconditionally, at
+                # the cost of repeat users occupying one slot per request.
                 slot_key=((req.user_id, req.feature_version)
                           if self.cache_user_reps else ri)))
 

@@ -8,7 +8,9 @@ import numpy as np
 import pytest
 
 from repro.kernels import (din_attention, dot_interaction, embedding_bag,
+                           gather_einsum, gather_einsum_ref,
                            mari_matmul_fused, mari_matmul_fused_groups)
+from repro.kernels.gather_einsum.kernel import parse_spec
 from repro.kernels.din_attention.ref import din_attention_ref
 from repro.kernels.dot_interaction.ref import dot_interaction_ref
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
@@ -155,6 +157,93 @@ class TestExecutorPallasPath:
         np.testing.assert_allclose(out_jnp, ref, rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(out_pal, ref, rtol=1e-4, atol=1e-4)
         np.testing.assert_allclose(out_pal, out_jnp, rtol=1e-4, atol=1e-4)
+
+
+class TestGatherEinsum:
+    """Gather-aware einsum family (attention-side analogue of the
+    mari_matmul kernel gather): the stacked (U, ...) table is indexed by
+    ``user_index`` inside the contraction; the gathered (B, ...) operand
+    never materializes. Must match jnp.take(mode="clip") + einsum."""
+
+    SPECS = ("bd,uldh->blh", "bl,uld->bd", "blh,uh->bl")
+
+    def _args(self, spec, sizes, seed=0, idx_high=None):
+        x_sub, t_sub, _, row_spec = parse_spec(spec)
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = jax.random.normal(ks[0], tuple(sizes[c] for c in x_sub))
+        t = jax.random.normal(ks[1], tuple(sizes[c] for c in t_sub))
+        idx = jax.random.randint(ks[2], (sizes["b"],), 0,
+                                 idx_high or sizes["u"])
+        return x, t, idx, row_spec
+
+    @pytest.mark.parametrize("U", [1, 2, 3, 5, 8])   # non-pow2 included
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_matches_take_einsum(self, spec, U):
+        sizes = dict(u=U, b=13, l=7, d=6, h=5)
+        x, t, idx, row_spec = self._args(spec, sizes, seed=U)
+        out = gather_einsum(spec, x, t, idx, interpret=True)
+        expected = jnp.einsum(row_spec, x,
+                              jnp.take(t, idx, axis=0, mode="clip"))
+        np.testing.assert_allclose(out, expected, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(out, gather_einsum_ref(spec, x, t, idx),
+                                   rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("B,L,D,h", [
+        (1, 3, 4, 2), (53, 12, 9, 17), (300, 33, 18, 16),
+    ])
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_shape_sweep(self, spec, B, L, D, h):
+        """Odd / tile-crossing shapes (B above and below the 256-row block,
+        non-aligned feature dims)."""
+        sizes = dict(u=3, b=B, l=L, d=D, h=h)
+        x, t, idx, _ = self._args(spec, sizes, seed=B + L)
+        out = gather_einsum(spec, x, t, idx, interpret=True)
+        ref = gather_einsum_ref(spec, x, t, idx)
+        assert out.shape == ref.shape
+        np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_u1_rows_bit_identical_to_coalesced(self, spec):
+        """Row b depends only on (x[b], table[idx[b]]): slicing one user's
+        table down to U=1 reproduces that user's rows BIT-identically —
+        the invariant that makes a single request the degenerate case of
+        the coalesced batch."""
+        sizes = dict(u=4, b=24, l=5, d=6, h=3)
+        x, t, idx, _ = self._args(spec, sizes, seed=11)
+        out = gather_einsum(spec, x, t, idx, interpret=True)
+        for u in range(sizes["u"]):
+            rows = np.asarray(idx) == u
+            if not rows.any():
+                continue
+            out_u1 = gather_einsum(spec, x, t[u:u + 1],
+                                   jnp.zeros_like(idx), interpret=True)
+            np.testing.assert_array_equal(np.asarray(out)[rows],
+                                          np.asarray(out_u1)[rows])
+
+    @pytest.mark.parametrize("spec", SPECS)
+    def test_out_of_range_index_clamps(self, spec):
+        """Padded-row hazard: an out-of-range index must read the last
+        real slot (clip), never wrap (numpy) or NaN-fill (jax default)."""
+        sizes = dict(u=3, b=9, l=4, d=5, h=2)
+        x, t, idx, _ = self._args(spec, sizes, seed=7, idx_high=9)
+        assert (np.asarray(idx) >= sizes["u"]).any()   # seed chosen to OOB
+        out = gather_einsum(spec, x, t, idx, interpret=True)
+        assert np.isfinite(np.asarray(out)).all()
+        clamped = jnp.clip(idx, 0, sizes["u"] - 1)
+        np.testing.assert_array_equal(
+            np.asarray(out),
+            np.asarray(gather_einsum(spec, x, t, clamped, interpret=True)))
+
+    @pytest.mark.parametrize("bad", [
+        "ud,bld->bl",        # operands swapped
+        "bd,uldh->ulh",      # output keyed by user, not row
+        "bdd,ud->bd",        # repeated dim
+        "bd,uldh,bl->blh",   # three operands
+        "bd,uldh->blz",      # output dim from nowhere
+    ])
+    def test_bad_specs_raise(self, bad):
+        with pytest.raises(ValueError):
+            parse_spec(bad)
 
 
 class TestEmbeddingBag:

@@ -124,6 +124,29 @@ def test_int8_quantization_error_bound(arr):
     assert err.max() <= float(scale) / 2 + 1e-6
 
 
+# the gather-at-load kernel family: for ANY supported spec, shape mix
+# (non-pow2 U included) and index vector (out-of-range values included —
+# they must clamp), the Pallas kernel equals the jnp.take reference
+@given(spec=st.sampled_from(["bd,uldh->blh", "bl,uld->bd", "blh,uh->bl"]),
+       U=st.integers(1, 6), B=st.integers(1, 21), L=st.integers(1, 6),
+       D=st.integers(1, 7), h=st.integers(1, 5), oob=st.integers(0, 3),
+       seed=st.integers(0, 2**30))
+@settings(**SETTINGS)
+def test_gather_einsum_matches_reference(spec, U, B, L, D, h, oob, seed):
+    from repro.kernels.gather_einsum import gather_einsum, gather_einsum_ref
+    from repro.kernels.gather_einsum.kernel import parse_spec
+    x_sub, t_sub, _, _ = parse_spec(spec)
+    sizes = dict(u=U, b=B, l=L, d=D, h=h)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(ks[0], tuple(sizes[c] for c in x_sub))
+    t = jax.random.normal(ks[1], tuple(sizes[c] for c in t_sub))
+    idx = jax.random.randint(ks[2], (B,), 0, U + oob)
+    out = gather_einsum(spec, x, t, idx, interpret=True)
+    ref = gather_einsum_ref(spec, x, t, idx)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
 @given(seed=st.integers(0, 2**30), batch=st.integers(2, 16))
 @settings(max_examples=10, deadline=None)
 def test_serving_engine_modes_agree(seed, batch):

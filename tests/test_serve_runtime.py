@@ -9,6 +9,7 @@ import threading
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -201,6 +202,131 @@ class TestCoalescedLossless:
                              for u in range(3)])
         # U=1 (per-request) and U_pad=4 (3 users) at one bucket each
         assert eng.stage2_compilations <= 2
+
+
+@pytest.fixture(scope="module")
+def din():
+    graph, _ = build_din(embed_dim=8, seq_len=12, attn_mlp=(16, 8),
+                         mlp=(24, 12), item_vocab=128)
+    params = init_graph_params(graph, jax.random.PRNGKey(0))
+    user_in = {n.name for n in graph.input_nodes()
+               if n.attrs.get("domain") == "user"}
+    return graph, params, user_in
+
+
+class TestGatherAttention:
+    """Gather-aware attention (``gather_attention``): stage 2 consumes the
+    decomposed-attention boundary tensors as stacked (U, ...) tables + a
+    per-row user index, the gather folded into the contractions
+    (``kernels.gather_einsum``), so the (B, L, D, h)-class gathered user
+    blocks never materialize — while scores stay exact."""
+
+    def _engine(self, din_fixture, **kw):
+        graph, params, _ = din_fixture
+        kw.setdefault("hedging", False)
+        return ServingEngine(graph, params, mode="mari", max_batch=64,
+                             min_bucket=8, reparam_attention=True, **kw)
+
+    @pytest.mark.parametrize("use_pallas", [False, True])
+    def test_coalesced_bit_identical_and_matches_gather_off(
+            self, din, use_pallas):
+        graph, params, user_in = din
+        eng = self._engine(din, gather_attention=True, use_pallas=use_pallas)
+        # the attention boundary tensors actually ride the stacked path
+        assert {"din_attn::T", "din_attn::u_part",
+                "user_seq_emb"} <= eng.lazy_gather_inputs
+        reqs = [_request(graph, user_in, u, n, seed=u + 1)
+                for u, n in ((0, 11), (1, 17), (2, 5))]
+        per = [eng.score(r) for r in reqs]
+        co = eng.score_coalesced(reqs)
+        _assert_bit_identical(per, co)
+        assert eng.coalesced_calls >= 1
+        off = self._engine(din, gather_attention=False,
+                           use_pallas=use_pallas)
+        for c, r in zip(co, off.score_coalesced(reqs)):
+            np.testing.assert_allclose(c.scores, r.scores,
+                                       rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("mode", ["vani", "uoi", "mari"])
+    def test_modes_u1_vs_coalesced_bit_identical(self, din, mode):
+        """Flag on in EVERY mode: mari exercises the gather path; vani/uoi
+        have no decomposed attention (the flag is a no-op) — U=1 vs
+        coalesced must stay exact throughout."""
+        graph, params, user_in = din
+        eng = ServingEngine(graph, params, mode=mode, max_batch=64,
+                            min_bucket=8, reparam_attention=True,
+                            gather_attention=True, hedging=False)
+        if mode != "mari":
+            assert not eng.lazy_gather_inputs
+        reqs = [_request(graph, user_in, u, n, seed=u + 7)
+                for u, n in ((0, 9), (1, 21), (2, 13))]
+        per = [eng.score(r) for r in reqs]
+        co = eng.score_coalesced(reqs)
+        _assert_bit_identical(per, co)
+
+    def test_sharded_gather_attention_matches_unsharded(self, din):
+        """Candidate-axis sharding composes with the stacked-table path:
+        (U, ...) tables replicate, the index shards, and no (B, ...) user
+        block is ever all-gathered."""
+        graph, params, user_in = din
+        sh = self._engine(din, gather_attention=True, shard_candidates=True)
+        ref = self._engine(din, gather_attention=True)
+        reqs = [_request(graph, user_in, u, n, seed=u + 1)
+                for u, n in ((0, 21), (1, 12))]
+        _assert_bit_identical(ref.score_coalesced(reqs),
+                              sh.score_coalesced(reqs))
+
+    def test_out_of_range_user_index_clamps(self, din):
+        """Padded-row hazard (the batcher pads ``user_index`` alongside the
+        candidate rows): a poisoned index must CLAMP to the last real slot
+        — with U=3 and index 7, wrapping would read slot 1 and jax's
+        default take would NaN-fill the row; both are caught here."""
+        graph, params, user_in = din
+        eng = self._engine(din, gather_attention=True)
+        reqs = [_request(graph, user_in, u, 4, seed=u + 1) for u in range(3)]
+        eng.score_coalesced(reqs)                  # warm the rep cache
+        reps = [eng.cache.get((u, 0)) for u in range(3)]
+        table = {k: jnp.concatenate([r[k] for r in reps], axis=0)
+                 for k in reps[0]}                 # U=3, deliberately non-pow2
+        cand = {k: jnp.concatenate(
+                    [r.candidate_feeds[k] for r in reqs], axis=0)
+                for k in reqs[0].candidate_feeds}  # 12 rows
+        good = np.repeat(np.arange(3, dtype=np.int32), 4)
+        bad = good.copy()
+        bad[-4:] = 7                               # clip->2 (== good), wrap->1
+        out_bad = eng._stage2(eng._params_s2, table, jnp.asarray(bad), cand)
+        out_good = eng._stage2(eng._params_s2, table, jnp.asarray(good), cand)
+        for o in eng.outputs:
+            assert np.isfinite(np.asarray(out_bad[o])).all()
+            np.testing.assert_array_equal(np.asarray(out_bad[o]),
+                                          np.asarray(out_good[o]))
+
+
+class TestSingleStageCacheBypass:
+    """Single-stage serving (vani, or an unsplittable graph) has no stage-1
+    outputs to reuse — the rep cache must be a complete no-op there, not
+    bookkeeping overhead on the hot path."""
+
+    def test_vani_never_touches_cache(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="vani", max_batch=32,
+                            hedging=False)
+        assert not eng.two_stage and not eng.cache_user_reps
+        for uid in range(3):
+            r = eng.score(_request(graph, user_in, uid, 9, seed=uid))
+            assert not r.user_cache_hit
+        eng.score(_request(graph, user_in, 0, 9, seed=0))   # repeat user
+        assert len(eng.cache) == 0
+        assert eng.cache.hits == 0 and eng.cache.misses == 0
+
+    def test_two_stage_still_caches(self, paper):
+        graph, params, user_in = paper
+        eng = ServingEngine(graph, params, mode="mari", max_batch=32,
+                            hedging=False)
+        assert eng.cache_user_reps
+        eng.score(_request(graph, user_in, 5, 9, seed=5))
+        assert eng.score(
+            _request(graph, user_in, 5, 9, seed=5)).user_cache_hit
 
 
 class TestPrecatWeights:
