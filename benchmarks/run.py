@@ -24,10 +24,17 @@ _JSON_ROWS: list[dict] = []       # machine-readable mirror of the CSV rows
 _JSON_EXTRA: dict = {}            # structured per-bench payloads (serve)
 
 
-def _row(name: str, us: float, derived: str):
+def _row(name: str, us: float, derived: str, plan=None, preset=None):
+    """Emit one CSV row (+ JSON mirror). ``plan`` is the ``ServePlan`` that
+    produced an engine-backed row — recorded verbatim in the JSON output so
+    every bench row carries its exact serving config (provenance).
+    ``preset`` labels the named preset the plan was derived from."""
     print(f"{name},{us:.1f},{derived}", flush=True)
-    _JSON_ROWS.append({"name": name, "us_per_call": round(us, 1),
-                       "derived": derived})
+    row = {"name": name, "us_per_call": round(us, 1), "derived": derived}
+    if plan is not None:
+        row["preset"] = preset if preset is not None else plan.preset_name()
+        row["plan"] = plan.to_dict()
+    _JSON_ROWS.append(row)
 
 
 def _mk(key, *shape):
@@ -197,7 +204,8 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
     from repro.graph.executor import init_graph_params
     from repro.models.ranking import (PaperRankingConfig,
                                       build_paper_ranking_model)
-    from repro.serve import CoalescingBatcher, ServeRequest, ServingEngine
+    from repro.serve import (CoalescingBatcher, ServePlan, ServeRequest,
+                             ServingEngine)
 
     graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(scale))
     params = init_graph_params(graph, jax.random.PRNGKey(0))
@@ -207,12 +215,17 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
     ufeeds = {k: v for k, v in feeds.items() if k in user_in}
     cand = {k: v for k, v in feeds.items() if k not in user_in}
 
+    # rows are keyed by plan preset: each mode IS a preset's paradigm
+    # (vanilla/uoi/paper), evolved with the bench's row budget and hedging
+    # off — duplicate executions on this shared CPU would contaminate the
+    # latency/throughput rows the trajectory tracks. The exact plan rides
+    # along in every JSON row (provenance).
+    presets = {"vani": "vanilla", "uoi": "uoi", "mari": "paper"}
     modes = {}
     for mode in ("vani", "uoi", "mari"):
-        # hedging off: duplicate executions on this shared CPU would
-        # contaminate the latency/throughput rows the trajectory tracks
-        eng = ServingEngine(graph, params, mode=mode, max_batch=4096,
-                            hedging=False)
+        plan = ServePlan.preset(presets[mode]).evolve(
+            batch__max_batch=4096, batch__hedging=False)
+        eng = ServingEngine(graph, params, plan=plan)
         req = lambda uid, ver=0: ServeRequest(
             user_id=uid, user_feeds=ufeeds, candidate_feeds=cand,
             feature_version=ver)
@@ -240,11 +253,15 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
             "cold_ms": round(cold_ms, 3), "hit_ms": round(hit_ms, 3),
             "two_stage": eng.two_stage,
             "stage2_compilations": eng.stage2_compilations,
+            "preset": presets[mode],
+            "plan": plan.to_dict(),
         }
         _row(f"serve/{mode}/cold", cold_ms * 1e3,
-             f"B={B};two_stage={eng.two_stage}")
+             f"B={B};two_stage={eng.two_stage};preset={presets[mode]}",
+             plan=plan, preset=presets[mode])
         _row(f"serve/{mode}/hit", hit_ms * 1e3,
-             f"B={B};hit_speedup={cold_ms / hit_ms:.2f}x")
+             f"B={B};hit_speedup={cold_ms / hit_ms:.2f}x",
+             plan=plan, preset=presets[mode])
 
         # -- throughput: cross-user coalescing on vs off. Passes are
         # interleaved (off, on, off, on, ...) so machine-load drift lands on
@@ -276,10 +293,12 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
             "speedup": round(qps_on / qps_off, 3),
         }
         _row(f"serve/{mode}/qps/coalesce=off", 1e6 / qps_off,
-             f"B={B};users={qps_users};qps={qps_off:.1f}")
+             f"B={B};users={qps_users};qps={qps_off:.1f}",
+             plan=plan, preset=presets[mode])
         _row(f"serve/{mode}/qps/coalesce=on", 1e6 / qps_on,
              f"B={B};users={qps_users};qps={qps_on:.1f};"
-             f"vs_off={qps_on / qps_off:.2f}x")
+             f"vs_off={qps_on / qps_off:.2f}x",
+             plan=plan, preset=presets[mode])
         eng.close()
     _JSON_EXTRA["serve"] = {"config": "paper_ranking", "scale": scale,
                             "B": B, "iters": iters, "modes": modes}
@@ -370,7 +389,7 @@ def bench_attn(B: int = 2000, users: int = 8, iters: int = 5):
     from repro.data.features import make_recsys_feeds
     from repro.graph.executor import init_graph_params
     from repro.models.recsys import build_din
-    from repro.serve import ServeRequest, ServingEngine
+    from repro.serve import ServePlan, ServeRequest, ServingEngine
 
     graph, _ = build_din(embed_dim=8, seq_len=24, attn_mlp=(16, 8),
                          mlp=(24, 12), item_vocab=4096)
@@ -389,10 +408,12 @@ def bench_attn(B: int = 2000, users: int = 8, iters: int = 5):
 
     results = {}
     outs = {}
+    plans = {}
     for gather in (False, True):
-        eng = ServingEngine(graph, params, mode="mari", max_batch=4096,
-                            reparam_attention=True, use_pallas=True,
-                            gather_attention=gather, hedging=False)
+        plans[gather] = ServePlan.preset("tpu").evolve(
+            kernel__kernel_gather=False, kernel__gather_attention=gather,
+            batch__max_batch=4096, batch__hedging=False)
+        eng = ServingEngine(graph, params, plan=plans[gather])
         reps = []
         for uid in range(users):
             feeds = make_recsys_feeds(graph, 1, jax.random.PRNGKey(uid + 1))
@@ -439,7 +460,9 @@ def bench_attn(B: int = 2000, users: int = 8, iters: int = 5):
              f"B={B};users={users};bucket={bucket};"
              f"peak_bytes={r['peak_bytes']}"
              + (f";peak_ratio={ratio:.3f}x"
-                if gather and ratio is not None else ""))
+                if gather and ratio is not None else ""),
+             plan=plans[gather])
+        results[gather]["plan"] = plans[gather].to_dict()
     _JSON_EXTRA["attn"] = {"config": "din_reparam", "B": B, "users": users,
                            "bucket": bucket,
                            "gather_off": results[False],

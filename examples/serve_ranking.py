@@ -25,7 +25,8 @@ import numpy as np
 from repro.data.features import make_recsys_feeds
 from repro.graph.executor import init_graph_params
 from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
-from repro.serve import CoalescingBatcher, ServeRequest, ServingEngine
+from repro.serve import (CoalescingBatcher, ServePlan, ServeRequest,
+                         ServingEngine)
 
 
 def main():
@@ -77,10 +78,13 @@ def main():
     print(f"requests={args.requests} users={args.users} "
           f"candidates/request={args.candidates} max_batch={args.max_batch}")
     ref_scores = None
+    # ONE declarative plan, evolved per paradigm — the three engines differ
+    # only in graph.mode (repro.serve.plan is the config spine)
+    base_plan = ServePlan().evolve(batch__max_batch=args.max_batch,
+                                   kernel__use_pallas=args.use_pallas)
     for mode in ("vani", "uoi", "mari"):
-        eng = ServingEngine(graph, params, mode=mode,
-                            max_batch=args.max_batch,
-                            use_pallas=args.use_pallas)
+        eng = ServingEngine(graph, params,
+                            plan=base_plan.evolve(graph__mode=mode))
         if eng.conversion:
             print(f"[{mode}] MaRI rewrote "
                   f"{len(eng.conversion.rewrites)} matmuls")
@@ -116,8 +120,8 @@ def main():
           f"linger={args.linger_ms}ms --")
     # hedging off for the timed comparison: duplicate executions on a
     # shared CPU would contaminate the seq-vs-coalesced req/s numbers
-    eng = ServingEngine(graph, params, mode="mari", max_batch=args.max_batch,
-                        use_pallas=args.use_pallas, hedging=False)
+    eng = ServingEngine(graph, params, plan=base_plan.evolve(
+        graph__mode="mari", batch__hedging=False))
     rng = np.random.default_rng(0)
     keys = jax.random.split(jax.random.PRNGKey(7), args.requests)
     burst = [make_request(r, keys[r],

@@ -19,9 +19,17 @@ Usage (spawner re-execs itself as the workers)::
 
   python -m repro.dist.runner --spawn 2 --devices-per-process 2 --verify
   python -m repro.dist.runner --spawn 1 --devices-per-process 4 --bench
+  python -m repro.dist.runner --spawn 2 --plan plan.json --verify
 
 Each worker prints one JSON record per mode; the spawner re-emits worker
 0's stdout and fails if any worker fails.
+
+The serving configuration travels as a serialized ``ServePlan``: the
+spawner resolves ONE plan (``--plan`` file or the flag defaults, sharding
+forced on) and ships it to every worker as ``--plan-json``, so workers
+build their engines from the identical declarative config instead of
+re-parsing argv flags — the plan JSON is the single source of truth for
+the SPMD fleet's engine shape.
 """
 from __future__ import annotations
 
@@ -43,7 +51,37 @@ import subprocess
 import sys
 import time
 
+from repro.serve.plan import ServePlan
+
 MODES = ("vani", "uoi", "mari")
+
+
+def build_plan(args) -> ServePlan:
+    """The fleet's serving plan: an optional ``--plan`` JSON file with the
+    runner's operating requirements layered on top — candidate-axis
+    sharding on (that is what this runner exists to drive) and hedging off
+    (per-process duplicates would desynchronize the SPMD schedule).
+
+    Flag overrides beat the plan file only when EXPLICITLY given; without
+    a plan file the runner's own bench-sized defaults apply. A plan file's
+    ``max_batch``/``min_bucket``/``compress_scores`` therefore survive
+    unless the caller asks otherwise."""
+    base = ServePlan.load(args.plan) if args.plan else ServePlan()
+    over = {"batch__hedging": False}
+    if not base.shard.shard_candidates:
+        # force sharding ON, but keep a plan file's explicit shard COUNT
+        over["shard__shard_candidates"] = True
+    if args.max_batch is not None:
+        over["batch__max_batch"] = args.max_batch
+    elif not args.plan:
+        over["batch__max_batch"] = 256
+    if args.min_bucket is not None:
+        over["batch__min_bucket"] = args.min_bucket
+    elif not args.plan:
+        over["batch__min_bucket"] = 16
+    if args.compress_scores:             # store_true: only ever forces ON
+        over["shard__compress_scores"] = True
+    return base.evolve(**over)
 
 
 def _free_port() -> int:
@@ -92,32 +130,34 @@ def run_worker(args) -> int:
     graph, params, reqs = build_problem(args.scale, args.pool, args.users)
     pool_rows = sum(next(iter(r.candidate_feeds.values())).shape[0]
                     for r in reqs)
+    # the spawner ships the resolved plan as JSON; a directly-invoked
+    # worker (no --plan-json) falls back to building it from its own flags
+    plan = (ServePlan.from_json(args.plan_json) if args.plan_json
+            else build_plan(args))
+    compress = plan.shard.compress_scores
     records = []
     for mode in args.modes.split(","):
+        mplan = plan.evolve(graph__mode=mode)
         ref = ref_scores = None
         if args.verify:
             # process-local reference: plain single-device engine
             # (identical inputs in every worker -> identical references)
-            ref = ServingEngine(graph, params, mode=mode,
-                                max_batch=args.max_batch,
-                                min_bucket=args.min_bucket, hedging=False)
+            ref = ServingEngine(graph, params, plan=mplan.evolve(
+                shard__shard_candidates=False,
+                shard__compress_scores=False))
             ref_scores = [r.scores for r in ref.score_coalesced(reqs)]
 
-        eng = ServingEngine(graph, params, mode=mode,
-                            max_batch=args.max_batch,
-                            min_bucket=args.min_bucket,
-                            shard_candidates=True,
-                            compress_scores=args.compress_scores,
-                            hedging=False)
+        eng = ServingEngine(graph, params, plan=mplan)
         res = eng.score_coalesced(reqs)         # compile + verify pass
         rec = {"mode": mode, "processes": topo.num_processes,
                "shards": int(eng.mesh.devices.size),
                "devices_per_process": len(jax.local_devices()),
                "pool": pool_rows,
                "users": len(reqs),
-               "compress_scores": bool(args.compress_scores)}
+               "compress_scores": bool(compress),
+               "plan": mplan.to_dict()}
         if args.verify:
-            if args.compress_scores:
+            if compress:
                 # int8 wire: exact identity is forfeit by construction;
                 # per-element error <= that shard's scale/2
                 tol = max(float(np.abs(s).max()) for s in ref_scores) \
@@ -180,10 +220,11 @@ def spawn(args) -> int:
         cmd = [sys.executable, "-m", "repro.dist.runner",
                "--modes", args.modes, "--scale", str(args.scale),
                "--pool", str(args.pool), "--users", str(args.users),
-               "--max-batch", str(args.max_batch),
-               "--min-bucket", str(args.min_bucket),
-               "--passes", str(args.passes)]
-        for flag in ("verify", "bench", "compress_scores"):
+               "--passes", str(args.passes),
+               # ONE resolved plan, serialized — workers do not re-derive
+               # engine knobs from argv
+               "--plan-json", build_plan(args).to_json(indent=None)]
+        for flag in ("verify", "bench"):
             if getattr(args, flag):
                 cmd.append("--" + flag.replace("_", "-"))
         out_f = tempfile.TemporaryFile(mode="w+")
@@ -226,8 +267,12 @@ def main() -> int:
     ap.add_argument("--scale", type=float, default=0.03)
     ap.add_argument("--pool", type=int, default=90)
     ap.add_argument("--users", type=int, default=3)
-    ap.add_argument("--max-batch", type=int, default=256)
-    ap.add_argument("--min-bucket", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="stage-2 row budget (default: the --plan file's "
+                         "value, else 256)")
+    ap.add_argument("--min-bucket", type=int, default=None,
+                    help="smallest bucket (default: the --plan file's "
+                         "value, else 16)")
     ap.add_argument("--passes", type=int, default=5)
     ap.add_argument("--verify", action="store_true",
                     help="assert sharded == local fp32 scores bit-identically")
@@ -235,6 +280,12 @@ def main() -> int:
                     help="emit qps rows per mode")
     ap.add_argument("--compress-scores", action="store_true",
                     help="opt-in int8-compressed score all-gather")
+    ap.add_argument("--plan", default=None, metavar="PATH",
+                    help="base ServePlan JSON file (spawner: sharding is "
+                         "forced on top of it)")
+    ap.add_argument("--plan-json", default=None, metavar="JSON",
+                    help="worker-side: the serialized plan shipped by the "
+                         "spawner")
     ap.add_argument("--timeout", type=int, default=900)
     args = ap.parse_args()
     if args.spawn:

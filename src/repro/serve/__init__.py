@@ -21,6 +21,13 @@ grown into an async, multi-user subsystem:
   with eviction accounting and per-user invalidation.
 * ``hedging`` — ``HedgePolicy`` (rolling-p99 decision) + ``HedgedRunner``
   (real duplicate execution of straggling chunks, first result wins).
+* ``plan``    — ``ServePlan``: the frozen, validated, JSON-serializable
+  serving configuration (nested Graph/Kernel/Batch/Shard/Cache sections,
+  cross-field validation with a documented resolution table, named
+  presets) — the config spine every entry point shares.
+* ``service`` — ``RankingService``: multi-scenario router hosting several
+  registry models behind one ``submit(scenario, request)`` API, with a
+  shared rep-cache budget across scenario engines.
 """
 from repro.serve.batcher import (  # noqa: F401
     SLO_BEST_EFFORT,
@@ -34,3 +41,15 @@ from repro.serve.engine import (  # noqa: F401
     ServingEngine,
 )
 from repro.serve.hedging import HedgedRunner, HedgePolicy  # noqa: F401
+from repro.serve.plan import (  # noqa: F401
+    PRESETS,
+    BatchPlan,
+    CachePlan,
+    GraphPlan,
+    KernelPlan,
+    PlanError,
+    PlanResolutionWarning,
+    ServePlan,
+    ShardPlan,
+)
+from repro.serve.service import RankingService  # noqa: F401

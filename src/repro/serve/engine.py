@@ -21,41 +21,40 @@ are bit-identical to per-request scores (proven by test) — row results of
 the row-parallel residual graph do not depend on batch size, packing
 position, or rep-table size.
 
-Knobs beyond the seed engine:
+Configuration is a ``repro.serve.plan.ServePlan`` — the frozen, validated,
+JSON-serializable config spine shared by every entry point::
 
-* ``max_cached_users`` — LRU bound on the user-rep cache (+ ``cache_evictions``);
-* ``precat_weights`` — pre-concatenate each stage-2 ``mari_dense``'s grouped
-  weights at build time so the per-call weight concat leaves the hot path
-  (bit-identical: the streamed operands are unchanged);
-* ``hedging`` — REAL duplicate execution of straggling chunks with
-  first-result-wins (``repro.serve.hedging``), replacing the seed's
-  decision-only counter;
-* ``shard_candidates`` — shard stage 2 over the candidate axis on the
-  ``repro.dist`` 'cand' mesh (user rep tables + params replicated,
-  candidate rows + user index split across shards). Single-process
-  ``jax.sharding`` is the degenerate case; when ``jax.distributed`` is
-  initialized the same engine runs SPMD across processes — every worker
-  executes the identical dispatch sequence, inputs are globalized onto the
-  multi-host mesh, and the closing score all-gather (the step's one
-  collective) hands every host the full result. Buckets come from the
-  collective-aware planner (``repro.dist.topology``), so no shard ever
-  sees a ragged tail;
-* ``kernel_gather`` — with ``use_pallas``, skip materializing the gathered
-  row-wise ``mari_dense`` partials: the Pallas kernel indexes the stacked
-  (U, units) rep table by ``user_index`` at accumulator-init load time;
-* ``gather_attention`` — the same gather-at-load discipline for the
-  attention-side user tensors: stage-2 boundary keys / ``u_part`` / ``T``
-  of a decomposed (reparam) ``target_attention`` stay stacked ``(U, ...)``
-  and ``kernels.gather_einsum`` indexes them by ``user_index`` inside the
-  contractions, so stage-2 peak memory scales with ``U·L·D·h + B·d``
-  instead of ``B·L·D·h`` (with ``use_pallas``; the jnp fallback keeps the
-  identical scores with the materializing memory profile).
+    engine = ServingEngine(graph, params, plan=ServePlan.preset("paper"))
+    engine = ServingEngine(graph, params,
+                           plan=ServePlan().evolve(graph__mode="uoi"))
+
+``plan.graph`` picks the paradigm and MaRI-rewrite shape, ``plan.kernel``
+the Pallas dispatch (fused ``mari_dense``, rep-table ``kernel_gather`` at
+accumulator-init load, gather-at-load ``gather_attention`` boundaries),
+``plan.batch`` the bucketing/coalescing/hedging envelope, ``plan.shard``
+candidate-axis sharding on the ``repro.dist`` 'cand' mesh (single-process
+``jax.sharding`` or SPMD across ``jax.distributed`` workers, optional int8
+score gather), and ``plan.cache`` the bounded LRU user-rep store. Invalid
+combinations are rejected or auto-resolved AT PLAN CONSTRUCTION (see the
+resolution table in ``repro.serve.plan``) instead of failing late or
+silently no-oping inside the engine.
+
+Legacy keyword construction — ``ServingEngine(graph, params, mode=...,
+use_pallas=..., ...)`` — still works as a thin shim that builds the
+equivalent plan and emits a ``DeprecationWarning``; scores are identical
+to the plan path by construction (proven by test).
+
+Two runtime-dependent adjustments stay here rather than in the plan: a
+multi-process 'cand' mesh forces ``hedging`` off (per-process duplicates
+would desynchronize the SPMD collective schedule), and a sharded engine
+rounds ``max_batch`` down to a shard-divisible power of two.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Mapping, Sequence
+import warnings
+from typing import Hashable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -68,6 +67,7 @@ from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
 from repro.serve.cache import UserRepCache
 from repro.serve.hedging import HedgedRunner, HedgePolicy
+from repro.serve.plan import ServePlan
 
 
 @dataclasses.dataclass
@@ -127,26 +127,58 @@ class _ReqInfo:                   # per-request working state inside a batch
 
 
 class ServingEngine:
-    def __init__(self, graph: Graph, params: dict, *, mode: str = "mari",
-                 max_batch: int = 4096, cache_user_reps: bool = True,
-                 two_stage: bool | None = None, min_bucket: int = 128,
-                 use_pallas: bool = False, reparam_attention: bool = False,
-                 fragment: bool = False, group_by_domain: bool = False,
-                 max_cached_users: int | None = None,
-                 precat_weights: bool = True,
-                 shard_candidates: bool | int = False,
-                 compress_scores: bool = False,
-                 kernel_gather: bool = False,
-                 gather_attention: bool = False,
-                 hedging: bool = True,
+    def __init__(self, graph: Graph, params: dict,
+                 plan: ServePlan | str | None = None, *,
                  hedge_policy: HedgePolicy | None = None,
-                 max_users_per_batch: int = 8):
-        if mode not in ("vani", "uoi", "mari"):
-            raise ValueError(mode)
+                 cache: UserRepCache | None = None,
+                 cache_scope: Hashable | None = None,
+                 **legacy_kwargs):
+        """Compile ``graph`` for two-stage serving per ``plan``.
+
+        ``plan`` is a ``ServePlan`` (or a preset name). ``cache`` /
+        ``cache_scope`` let a host (``RankingService``) inject a SHARED
+        ``UserRepCache``: cache keys are namespaced by ``cache_scope`` so
+        several scenario engines can split one LRU budget without key
+        collisions. ``hedge_policy`` stays a constructor argument (it is a
+        live object, not serializable plan material).
+
+        Passing the old keyword knobs instead of ``plan`` still works: the
+        legacy shim builds the equivalent plan (fail-fast validation
+        included) and emits a ``DeprecationWarning``.
+        """
+        if plan is not None and legacy_kwargs:
+            raise TypeError(
+                f"pass plan= OR legacy keyword knobs, not both "
+                f"(got plan and {sorted(legacy_kwargs)})")
+        if isinstance(plan, str):
+            plan = ServePlan.preset(plan)
+        if plan is None:
+            if legacy_kwargs:
+                warnings.warn(
+                    "ServingEngine keyword knobs are deprecated — pass "
+                    "plan=ServePlan(...) (repro.serve.plan; "
+                    "ServePlan.from_legacy_kwargs maps old names)",
+                    DeprecationWarning, stacklevel=2)
+            plan = ServePlan.from_legacy_kwargs(**legacy_kwargs)
+        self.plan = plan
+        mode = plan.graph.mode
+        reparam_attention = plan.graph.reparam_attention
+        fragment = plan.graph.fragment
+        group_by_domain = plan.graph.group_by_domain
+        two_stage = plan.graph.two_stage
+        use_pallas = plan.kernel.use_pallas
+        kernel_gather = plan.kernel.kernel_gather
+        gather_attention = plan.kernel.gather_attention
+        precat_weights = plan.kernel.precat_weights
+        max_batch = plan.batch.max_batch
+        hedging = plan.batch.hedging
+        shard_candidates = plan.shard.shard_candidates
+        compress_scores = plan.shard.compress_scores
+
         self.mode = mode
         self.max_batch = max_batch
-        self.min_bucket = min(min_bucket, max_batch)
-        self.max_users_per_batch = max(1, max_users_per_batch)
+        self.min_bucket = plan.batch.min_bucket
+        self.max_users_per_batch = plan.batch.max_users_per_batch
         if mode == "mari":
             conv = mari_rewrite(graph, reparam_attention=reparam_attention,
                                 fragment=fragment,
@@ -193,9 +225,8 @@ class ServingEngine:
         self._n_shards = 1
         self._multiproc = False
         self.compress_scores = False
-        if compress_scores and not shard_candidates:
-            raise ValueError("compress_scores is the int8 cross-shard score "
-                             "gather — it requires shard_candidates")
+        # compress_scores without shard_candidates is rejected at plan
+        # construction (PlanError) — no late engine check needed
         if shard_candidates:
             from repro.dist.sharding import candidate_pspecs
             from repro.dist.topology import candidate_mesh
@@ -269,7 +300,10 @@ class ServingEngine:
         self.precat_weights = precat_weights
         if precat_weights:
             self.params = _precat_mari_weights(batched_graph, self.params)
-        self.kernel_gather = kernel_gather and use_pallas
+        # kernel_gather without use_pallas was auto-resolved to False at
+        # plan construction (with a PlanResolutionWarning), so no silent
+        # `and use_pallas` masking is needed here anymore
+        self.kernel_gather = kernel_gather
         # gather-aware attention works with or without Pallas: the executor
         # falls back to the jnp.take oracle off-TPU, so scores are identical
         # either way — only the memory profile needs the kernel
@@ -302,8 +336,13 @@ class ServingEngine:
         # "representation" is the raw feed dict, rebuilt per request — so
         # cache get/put there is pure bookkeeping overhead on the hot path
         # (BENCH_serve showed vani hit at 0.97x of cold); make it a no-op
-        self.cache_user_reps = cache_user_reps and self.two_stage
-        self.cache = UserRepCache(max_users=max_cached_users)
+        self.cache_user_reps = plan.cache.cache_user_reps and self.two_stage
+        # an injected cache is SHARED (RankingService budget); cache_scope
+        # namespaces this engine's keys inside it so same-valued user ids
+        # from different scenarios cannot collide on wrong-shaped reps
+        self.cache = cache if cache is not None else UserRepCache(
+            max_users=plan.cache.max_cached_users)
+        self._cache_scope = cache_scope
         self.hedge_policy = hedge_policy or HedgePolicy()
         self.hedging = hedging
         self._hedged = (HedgedRunner(self._dispatch, self.hedge_policy)
@@ -394,9 +433,14 @@ class ServingEngine:
         return self.cache.evictions
 
     # -- stage 1: user-side partial evaluation ------------------------------
+    def _scoped_uid(self, user_id: Hashable) -> Hashable:
+        """Namespace a user id for the (possibly shared) rep cache."""
+        return (user_id if self._cache_scope is None
+                else (self._cache_scope, user_id))
+
     def _user_reps(self, req: ServeRequest
                    ) -> tuple[Mapping[str, jax.Array], bool, float]:
-        key = (req.user_id, req.feature_version)
+        key = (self._scoped_uid(req.user_id), req.feature_version)
         if self.cache_user_reps:
             reps = self.cache.get(key)
             if reps is not None:
@@ -579,7 +623,7 @@ class ServingEngine:
         return out
 
     def invalidate_user(self, user_id: int) -> None:
-        self.cache.invalidate_user(user_id)
+        self.cache.invalidate_user(self._scoped_uid(user_id))
 
     def close(self) -> None:
         if self._hedged is not None:

@@ -1,0 +1,444 @@
+"""``ServePlan`` — the declarative, serializable serving configuration.
+
+Four PRs of serving-scale work grew ``ServingEngine.__init__`` into ~16
+accreted boolean/kwarg knobs that every entry point re-threaded by hand,
+with invalid combinations failing late or silently no-oping. ``ServePlan``
+replaces that flag soup with ONE frozen, validated, JSON-serializable
+config object — the spine every entry point (``launch/serve.py``,
+``dist/runner.py``, ``benchmarks/run.py``, examples, ``RankingService``)
+shares, and the surface future scale-out PRs extend.
+
+Sections (each its own frozen dataclass):
+
+* ``GraphPlan``  — inference paradigm + MaRI rewrite shape: ``mode``
+  (vani/uoi/mari), ``reparam_attention``, ``fragment``,
+  ``group_by_domain``, ``two_stage``;
+* ``KernelPlan`` — Pallas dispatch: ``use_pallas``, ``kernel_gather``,
+  ``gather_attention``, ``precat_weights``;
+* ``BatchPlan``  — bucketing/coalescing/SLO/hedging: ``max_batch``,
+  ``min_bucket``, ``max_users_per_batch``, ``hedging``, ``linger_ms``,
+  ``max_coalesce``, ``deadline_linger_frac``;
+* ``ShardPlan``  — candidate-axis sharding: ``shard_candidates``
+  (False / True / shard count), ``compress_scores``;
+* ``CachePlan``  — user-rep store: ``cache_user_reps``,
+  ``max_cached_users``.
+
+Validation happens AT CONSTRUCTION — an invalid combination is either
+rejected (``PlanError``) or auto-resolved with a ``PlanResolutionWarning``
+naming the documented resolution. The resolution table:
+
+====================================================  =======================
+combination                                           resolution
+====================================================  =======================
+``mode`` outside vani/uoi/mari                        reject (``PlanError``)
+``compress_scores`` without ``shard_candidates``      reject — the int8 wire
+                                                      IS the cross-shard
+                                                      score gather
+``two_stage=True`` with ``mode="vani"``               reject — vani tiles
+                                                      user feeds into the
+                                                      batch; there is no
+                                                      user-only stage
+non-positive ``max_batch`` / ``min_bucket`` /         reject
+``max_users_per_batch`` / ``max_coalesce`` /
+``max_cached_users``; negative ``linger_ms`` /
+shard count; ``deadline_linger_frac`` outside [0, 1]
+``kernel_gather`` without ``use_pallas``              drop ``kernel_gather``
+                                                      + warn (the rep-table
+                                                      gather only exists
+                                                      inside Pallas
+                                                      ``mari_matmul``)
+``gather_attention`` without decomposed attention     drop
+(``mode!="mari"`` or no ``reparam_attention``)        ``gather_attention``
+                                                      + warn
+``reparam_attention``/``fragment``/                   drop them + warn (they
+``group_by_domain`` with ``mode != "mari"``           parameterize the MaRI
+                                                      rewrite only)
+``min_bucket > max_batch``                            clamp ``min_bucket``
+                                                      to ``max_batch``
+                                                      (silent normalization
+                                                      — same contract the
+                                                      engine always had)
+====================================================  =======================
+
+Round-trip: ``ServePlan.from_json(plan.to_json()) == plan``. Named presets
+(``ServePlan.preset("paper")`` …) capture the serving shapes the repo's
+benchmarks and recipes use. ``plan.evolve(graph__mode="uoi", ...)``
+derives a new plan with section fields replaced (double-underscore
+addresses ``<section>__<field>``).
+
+Runtime-dependent interactions stay in the engine: a multi-process 'cand'
+mesh forces ``hedging`` off (per-process duplicate execution would
+desynchronize the SPMD collective schedule), and a sharded engine rounds
+``max_batch`` down to a shard-divisible power of two — both depend on the
+device world at construction time, which a serialized plan cannot know.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Mapping
+
+MODES = ("vani", "uoi", "mari")
+
+
+class PlanError(ValueError):
+    """An invalid ``ServePlan`` combination that cannot be auto-resolved."""
+
+
+class PlanResolutionWarning(UserWarning):
+    """An invalid combination was auto-resolved per the resolution table."""
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphPlan:
+    """Inference paradigm and MaRI-rewrite shape."""
+    mode: str = "mari"                 # "vani" | "uoi" | "mari"
+    reparam_attention: bool = False    # mari: decompose eligible attention
+    fragment: bool = False             # mari: fragmented-layout rewrite
+    group_by_domain: bool = False      # mari: group weight blocks by domain
+    two_stage: bool | None = None      # None = infer (uoi/mari split)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPlan:
+    """Pallas kernel dispatch (interpret mode off-TPU)."""
+    use_pallas: bool = False           # fused mari_dense / gather_einsum
+    kernel_gather: bool = False        # rep-table gather at acc-init load
+    gather_attention: bool = False     # gather-at-load attention boundaries
+    precat_weights: bool = True        # build-time grouped-weight concat
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchPlan:
+    """Bucketing, cross-user coalescing, SLO linger, and hedging."""
+    max_batch: int = 4096              # stage-2 row budget per dispatch
+    min_bucket: int = 128              # smallest pow2 candidate bucket
+    max_users_per_batch: int = 8       # rep-table slot budget per pack
+    hedging: bool = True               # duplicate straggling dispatches
+    linger_ms: float = 2.0             # batcher window for co-arrivals
+    max_coalesce: int = 64             # request budget per batcher group
+    deadline_linger_frac: float = 0.25  # linger shrink for deadline SLO
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Candidate-axis sharding on the ``repro.dist`` 'cand' mesh."""
+    shard_candidates: bool | int = False   # False | True (all) | shard count
+    compress_scores: bool = False          # int8 cross-shard score gather
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePlan:
+    """Bounded LRU user-representation store."""
+    cache_user_reps: bool = True
+    max_cached_users: int | None = None    # None = unbounded
+
+
+_SECTIONS: dict[str, type] = {"graph": GraphPlan, "kernel": KernelPlan,
+                              "batch": BatchPlan, "shard": ShardPlan,
+                              "cache": CachePlan}
+
+# legacy ServingEngine kwarg -> (section, field). The shim in
+# ``ServingEngine.__init__`` routes deprecated keyword construction here.
+_LEGACY_KWARGS: dict[str, tuple[str, str]] = {
+    "mode": ("graph", "mode"),
+    "reparam_attention": ("graph", "reparam_attention"),
+    "fragment": ("graph", "fragment"),
+    "group_by_domain": ("graph", "group_by_domain"),
+    "two_stage": ("graph", "two_stage"),
+    "use_pallas": ("kernel", "use_pallas"),
+    "kernel_gather": ("kernel", "kernel_gather"),
+    "gather_attention": ("kernel", "gather_attention"),
+    "precat_weights": ("kernel", "precat_weights"),
+    "max_batch": ("batch", "max_batch"),
+    "min_bucket": ("batch", "min_bucket"),
+    "max_users_per_batch": ("batch", "max_users_per_batch"),
+    "hedging": ("batch", "hedging"),
+    "shard_candidates": ("shard", "shard_candidates"),
+    "compress_scores": ("shard", "compress_scores"),
+    "cache_user_reps": ("cache", "cache_user_reps"),
+    "max_cached_users": ("cache", "max_cached_users"),
+}
+
+
+def _require(cond: bool, msg: str) -> None:
+    if not cond:
+        raise PlanError(msg)
+
+
+# per-field type contracts, checked BEFORE the range/combination rules so a
+# hand-edited plan file with a wrong-typed scalar (e.g. a quoted number)
+# fails with the documented PlanError, not a bare TypeError. A trailing "?"
+# allows None; "int" excludes bool (True is not a row budget).
+_FIELD_TYPES: dict[str, dict[str, str]] = {
+    "graph": {"mode": "str", "reparam_attention": "bool",
+              "fragment": "bool", "group_by_domain": "bool",
+              "two_stage": "bool?"},
+    "kernel": {"use_pallas": "bool", "kernel_gather": "bool",
+               "gather_attention": "bool", "precat_weights": "bool"},
+    "batch": {"max_batch": "int", "min_bucket": "int",
+              "max_users_per_batch": "int", "hedging": "bool",
+              "linger_ms": "num", "max_coalesce": "int",
+              "deadline_linger_frac": "num"},
+    "shard": {"shard_candidates": "bool_or_int", "compress_scores": "bool"},
+    "cache": {"cache_user_reps": "bool", "max_cached_users": "int?"},
+}
+
+
+def _type_ok(kind: str, v: Any) -> bool:
+    if kind.endswith("?"):
+        if v is None:
+            return True
+        kind = kind[:-1]
+    if kind == "str":
+        return isinstance(v, str)
+    if kind == "bool":
+        return isinstance(v, bool)
+    if kind == "int":
+        return isinstance(v, int) and not isinstance(v, bool)
+    if kind == "num":
+        return isinstance(v, (int, float)) and not isinstance(v, bool)
+    if kind == "bool_or_int":
+        return isinstance(v, int)          # bool is a subtype of int
+    raise AssertionError(kind)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServePlan:
+    """Frozen, validated, JSON-serializable serving configuration.
+
+    Construction validates cross-field combinations per the module
+    docstring's resolution table: contradictions raise ``PlanError``;
+    resolvable combos are rewritten with a ``PlanResolutionWarning`` (the
+    resolved plan is what ``to_json`` serializes, so resolution is
+    idempotent and round-trips cleanly). Sections may be given as dicts —
+    ``ServePlan(graph={"mode": "uoi"})`` — which ``from_json`` relies on.
+    """
+    graph: GraphPlan = GraphPlan()
+    kernel: KernelPlan = KernelPlan()
+    batch: BatchPlan = BatchPlan()
+    shard: ShardPlan = ShardPlan()
+    cache: CachePlan = CachePlan()
+
+    # -- validation ---------------------------------------------------------
+    def __post_init__(self):
+        for name, cls in _SECTIONS.items():
+            v = getattr(self, name)
+            if isinstance(v, Mapping):
+                unknown = set(v) - {f.name for f in dataclasses.fields(cls)}
+                _require(not unknown,
+                         f"unknown {name}-plan fields {sorted(unknown)}; "
+                         f"known: {[f.name for f in dataclasses.fields(cls)]}")
+                object.__setattr__(self, name, cls(**v))
+            elif not isinstance(v, cls):
+                raise PlanError(
+                    f"plan section {name!r} must be a {cls.__name__} or a "
+                    f"dict, got {type(v).__name__}")
+        for name, fields in _FIELD_TYPES.items():
+            section = getattr(self, name)
+            for field, kind in fields.items():
+                v = getattr(section, field)
+                _require(_type_ok(kind, v),
+                         f"{name}.{field} must be {kind.rstrip('?')}"
+                         f"{' or None' if kind.endswith('?') else ''}, "
+                         f"got {type(v).__name__} ({v!r})")
+        g, k, b, s, c = (self.graph, self.kernel, self.batch, self.shard,
+                         self.cache)
+
+        # hard errors: contradictions with no meaningful resolution
+        _require(g.mode in MODES,
+                 f"unknown mode {g.mode!r}; known: {list(MODES)}")
+        _require(not (g.two_stage is True and g.mode == "vani"),
+                 "two_stage=True with mode='vani': vani tiles user feeds "
+                 "into the candidate batch — there is no user-only stage to "
+                 "precompute; drop two_stage or pick uoi/mari")
+        _require(b.max_batch >= 1, f"max_batch must be >= 1, got "
+                 f"{b.max_batch}")
+        _require(b.min_bucket >= 1, f"min_bucket must be >= 1, got "
+                 f"{b.min_bucket}")
+        _require(b.max_users_per_batch >= 1,
+                 f"max_users_per_batch must be >= 1, got "
+                 f"{b.max_users_per_batch}")
+        _require(b.max_coalesce >= 1,
+                 f"max_coalesce must be >= 1, got {b.max_coalesce}")
+        _require(b.linger_ms >= 0, f"linger_ms must be >= 0, got "
+                 f"{b.linger_ms}")
+        _require(0.0 <= b.deadline_linger_frac <= 1.0,
+                 f"deadline_linger_frac must be in [0, 1], got "
+                 f"{b.deadline_linger_frac}")
+        _require(not (isinstance(s.shard_candidates, int)
+                      and not isinstance(s.shard_candidates, bool)
+                      and s.shard_candidates < 0),
+                 f"shard_candidates count must be >= 0, got "
+                 f"{s.shard_candidates}")
+        _require(not (s.compress_scores and not s.shard_candidates),
+                 "compress_scores is the int8 cross-shard score gather — it "
+                 "requires shard_candidates")
+        _require(c.max_cached_users is None or c.max_cached_users >= 1,
+                 f"max_cached_users must be >= 1 (or None for unbounded), "
+                 f"got {c.max_cached_users}")
+
+        # auto-resolutions: drop the no-op knob and say why (the previously
+        # SILENT combos of the pre-plan engine)
+        notes = []
+        if k.kernel_gather and not k.use_pallas:
+            notes.append(
+                "kernel_gather without use_pallas: the rep-table gather at "
+                "accumulator-init load only exists inside the Pallas "
+                "mari_matmul — resolved to kernel_gather=False (set "
+                "use_pallas=True to keep it)")
+            object.__setattr__(self, "kernel",
+                               dataclasses.replace(self.kernel,
+                                                   kernel_gather=False))
+        if k.gather_attention and not (g.mode == "mari"
+                                       and g.reparam_attention):
+            notes.append(
+                "gather_attention without decomposed attention (needs "
+                "mode='mari' AND reparam_attention=True): there are no "
+                "stacked attention boundary tables to gather from — "
+                "resolved to gather_attention=False")
+            object.__setattr__(self, "kernel",
+                               dataclasses.replace(self.kernel,
+                                                   gather_attention=False))
+        rewrite_knobs = [n for n in ("reparam_attention", "fragment",
+                                     "group_by_domain")
+                         if getattr(g, n)]
+        if rewrite_knobs and g.mode != "mari":
+            notes.append(
+                f"{'/'.join(rewrite_knobs)} with mode={g.mode!r}: these "
+                f"parameterize the MaRI rewrite, which only runs under "
+                f"mode='mari' — resolved to False")
+            object.__setattr__(
+                self, "graph",
+                dataclasses.replace(self.graph,
+                                    **{n: False for n in rewrite_knobs}))
+        # silent normalization (the engine's long-standing contract): the
+        # smallest bucket can never exceed the row budget
+        if b.min_bucket > b.max_batch:
+            object.__setattr__(self, "batch",
+                               dataclasses.replace(self.batch,
+                                                   min_bucket=b.max_batch))
+        object.__setattr__(self, "_notes", tuple(notes))
+        for msg in notes:
+            warnings.warn(msg, PlanResolutionWarning, stacklevel=3)
+
+    @property
+    def resolution_notes(self) -> tuple[str, ...]:
+        """Auto-resolutions applied at construction (empty if none)."""
+        return self._notes
+
+    # -- derivation ---------------------------------------------------------
+    def evolve(self, **updates: Any) -> "ServePlan":
+        """Return a new plan with section fields replaced.
+
+        Fields are addressed ``<section>__<field>``::
+
+            plan.evolve(graph__mode="uoi", shard__shard_candidates=True)
+        """
+        per_section: dict[str, dict[str, Any]] = {n: {} for n in _SECTIONS}
+        for key, value in updates.items():
+            section, sep, field = key.partition("__")
+            if not sep or section not in _SECTIONS or not field:
+                raise TypeError(
+                    f"evolve key {key!r} must be <section>__<field> with "
+                    f"section in {sorted(_SECTIONS)}")
+            per_section[section][field] = value
+        kwargs = {}
+        for name, fields in per_section.items():
+            cur = getattr(self, name)
+            # dataclasses.replace raises TypeError on unknown field names
+            kwargs[name] = dataclasses.replace(cur, **fields) if fields \
+                else cur
+        return ServePlan(**kwargs)
+
+    # -- serialization ------------------------------------------------------
+    def to_dict(self) -> dict:
+        return {name: dataclasses.asdict(getattr(self, name))
+                for name in _SECTIONS}
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ServePlan":
+        unknown = set(d) - set(_SECTIONS)
+        _require(not unknown,
+                 f"unknown plan sections {sorted(unknown)}; known: "
+                 f"{sorted(_SECTIONS)}")
+        # sections pass through raw: __post_init__ owns validation, so a
+        # malformed section (null, a string, ...) raises the documented
+        # PlanError instead of a bare TypeError from dict()
+        return cls(**{name: d[name] for name in _SECTIONS if name in d})
+
+    @classmethod
+    def from_json(cls, s: str) -> "ServePlan":
+        d = json.loads(s)
+        _require(isinstance(d, dict), "plan JSON must be an object")
+        return cls.from_dict(d)
+
+    @classmethod
+    def load(cls, path: str) -> "ServePlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    # -- legacy kwargs shim -------------------------------------------------
+    @classmethod
+    def from_legacy_kwargs(cls, **kwargs: Any) -> "ServePlan":
+        """Build a plan from the pre-plan ``ServingEngine`` keyword knobs.
+
+        Unknown knobs raise ``TypeError`` (matching the old signature's
+        behavior); invalid combinations raise/warn per the resolution
+        table — the previously-silent no-op combos now fail fast.
+        """
+        unknown = set(kwargs) - set(_LEGACY_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"unknown ServingEngine kwargs {sorted(unknown)}; legacy "
+                f"knobs: {sorted(_LEGACY_KWARGS)}")
+        per_section: dict[str, dict[str, Any]] = {}
+        for kw, value in kwargs.items():
+            section, field = _LEGACY_KWARGS[kw]
+            per_section.setdefault(section, {})[field] = value
+        return cls(**{name: _SECTIONS[name](**fields)
+                      for name, fields in per_section.items()})
+
+    # -- presets ------------------------------------------------------------
+    @classmethod
+    def preset(cls, name: str) -> "ServePlan":
+        """Named serving shapes: 'paper', 'vanilla', 'uoi', 'tpu',
+        'distributed' (see ``PRESETS``)."""
+        if name not in PRESETS:
+            raise PlanError(
+                f"unknown preset {name!r}; known: {sorted(PRESETS)}")
+        return PRESETS[name]
+
+    def preset_name(self) -> str | None:
+        """The preset this plan equals, if any (provenance labeling)."""
+        for name, plan in PRESETS.items():
+            if plan == self:
+                return name
+        return None
+
+
+# Frozen instances are immutable, so sharing the preset objects is safe.
+PRESETS: dict[str, ServePlan] = {
+    # the paper's serving shape: MaRI rewrite + two-stage split + coalescing
+    "paper": ServePlan(),
+    # baseline paradigms of Fig. 1 (single-stage tiled / two-stage uoi)
+    "vanilla": ServePlan(graph=GraphPlan(mode="vani")),
+    "uoi": ServePlan(graph=GraphPlan(mode="uoi")),
+    # everything the Pallas path offers: fused mari_dense with the
+    # kernel-side rep-table gather + gather-at-load decomposed attention
+    "tpu": ServePlan(graph=GraphPlan(mode="mari", reparam_attention=True),
+                     kernel=KernelPlan(use_pallas=True, kernel_gather=True,
+                                       gather_attention=True)),
+    # candidate-axis sharding on the 'cand' mesh; hedging off because the
+    # multi-process SPMD schedule cannot tolerate per-process duplicates
+    "distributed": ServePlan(shard=ShardPlan(shard_candidates=True),
+                             batch=BatchPlan(hedging=False)),
+}
