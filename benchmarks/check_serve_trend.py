@@ -1,0 +1,129 @@
+"""CI trend gate for the serve benchmark rows.
+
+Compares a freshly-measured ``--bench serve`` JSON payload against the
+committed ``BENCH_serve.json`` baseline and fails (exit 1) when the serving
+hot path regresses. This gate — not per-run asserts inside ``bench_serve``
+— owns the serve latency contracts:
+
+* **trend**: every ``serve/*`` row present in both files must not regress
+  by more than ``--max-regress`` (default 25%) in ``us_per_call``;
+* **coverage**: every baseline row must still be emitted by the fresh run
+  (a silently dropped row would freeze its trend forever);
+* **single-stage cache contract** (was an assert in ``bench_serve``):
+  ``vani`` hit ≤ 1.25× cold — the single-stage engine bypasses the rep
+  cache, so hit and cold do identical work and a sustained gap means
+  cache bookkeeping crept back onto the hot path;
+* **two-stage cache contract**: ``mari`` hit ≥ 1.5× faster than cold —
+  the bench's deep user tower makes stage 1 the dominant cold cost, so a
+  hit that fails to clear 1.5× means the cache (or the device-resident
+  dispatch path behind it) stopped paying for itself;
+* **observability**: ``serve/<mode>/breakdown`` rows (the per-phase
+  pack/dispatch/device/unpack profile) must be present for every mode.
+
+Usage (what CI runs):
+
+    python -m benchmarks.run --bench serve --json BENCH_serve_fresh.json
+    python -m benchmarks.check_serve_trend \
+        --baseline BENCH_serve.json --fresh BENCH_serve_fresh.json
+
+Faster-than-baseline rows are reported but never gate: improvements are
+committed by regenerating ``BENCH_serve.json``, which resets the baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+MODES = ("vani", "uoi", "mari")
+
+
+def _rows(payload: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in payload.get("rows", [])
+            if r["name"].startswith("serve/")}
+
+
+def _mode_latency(payload: dict, mode: str) -> tuple[float, float]:
+    m = payload["serve"]["modes"][mode]
+    return float(m["cold_ms"]), float(m["hit_ms"])
+
+
+def check(baseline: dict, fresh: dict, max_regress: float) -> list[str]:
+    """Return the list of failure messages (empty == gate passes)."""
+    failures: list[str] = []
+    base_rows, fresh_rows = _rows(baseline), _rows(fresh)
+
+    # -- coverage: every baseline row must still exist ----------------------
+    for name in sorted(set(base_rows) - set(fresh_rows)):
+        failures.append(f"missing row: {name} (in baseline, not in fresh)")
+
+    # -- trend: per-row regression gate -------------------------------------
+    print(f"{'row':44s} {'base_us':>10s} {'fresh_us':>10s} {'delta':>8s}")
+    for name in sorted(set(base_rows) & set(fresh_rows)):
+        b = float(base_rows[name]["us_per_call"])
+        f = float(fresh_rows[name]["us_per_call"])
+        delta = (f - b) / b if b else 0.0
+        mark = ""
+        if delta > max_regress:
+            mark = "  << REGRESSION"
+            failures.append(
+                f"regression: {name} {b:.1f}us -> {f:.1f}us "
+                f"({delta:+.0%} > {max_regress:.0%} budget)")
+        print(f"{name:44s} {b:10.1f} {f:10.1f} {delta:+7.0%}{mark}")
+
+    # -- latency contracts on the FRESH run ---------------------------------
+    try:
+        cold, hit = _mode_latency(fresh, "vani")
+        if hit > cold * 1.25:
+            failures.append(
+                f"vani cache contract: hit {hit:.3f}ms > 1.25x cold "
+                f"{cold:.3f}ms — single-stage bookkeeping on the hot path")
+        cold, hit = _mode_latency(fresh, "mari")
+        if cold < hit * 1.5:
+            failures.append(
+                f"mari cache contract: cold {cold:.3f}ms < 1.5x hit "
+                f"{hit:.3f}ms — rep-cache hit no longer pays for itself")
+    except KeyError as e:
+        failures.append(f"fresh payload missing serve mode summary: {e}")
+
+    # -- observability: breakdown rows present ------------------------------
+    for mode in MODES:
+        if f"serve/{mode}/breakdown" not in fresh_rows:
+            failures.append(f"missing breakdown row: serve/{mode}/breakdown")
+
+    # informational (not gated: on-vs-off qps is asserted lossless in-bench
+    # and tracked by the per-row trend above)
+    for mode in MODES:
+        q = fresh.get("serve", {}).get("modes", {}).get(mode, {}).get("qps")
+        if q:
+            print(f"# {mode}: coalesce speedup {q['speedup']}x "
+                  f"(on={q['coalesce_on']} off={q['coalesce_off']} qps)")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_serve.json",
+                    help="committed serve bench JSON (the trend baseline)")
+    ap.add_argument("--fresh", default="BENCH_serve_fresh.json",
+                    help="serve bench JSON from this run")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="per-row us_per_call regression budget "
+                         "(0.25 = fail beyond +25%%)")
+    args = ap.parse_args()
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    failures = check(baseline, fresh, args.max_regress)
+    if failures:
+        print(f"\nFAIL: {len(failures)} serve trend violation(s)")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nOK: serve rows within trend budget, contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -39,6 +39,16 @@ every candidate in the batch. ``split_two_stage`` cuts a graph into:
   kernel (Pallas ``mari_matmul`` acc-init / ``kernels.gather_einsum``
   attention contractions) indexes it by ``user_index`` at load time.
 
+  The row-wise tables admit a third, *persistent* realization
+  (``CachePlan.device_resident``): instead of stacking U cached rows per
+  call, the serving cache holds ONE live (capacity, ...) device array per
+  boundary name — shaped by ``TwoStageSplit.table_specs`` — written one
+  row at a time and addressed by per-row *slot* indices. The contract
+  that makes this safe is the same one the coalesced form relies on:
+  stage-2 gathers clamp (``mode="clip"``) and row results are independent
+  of table size and of the contents of unreferenced rows, so dead or
+  stale slots can never leak into a live row's score.
+
 Both stages share ONE params dict: partial nodes reference their source
 node's params via ``attrs["param_of"]`` indirection, so no weight is copied
 or re-keyed.
@@ -95,6 +105,14 @@ class TwoStageSplit:
         """Per-entry specs for this split's stacked rep tables — the
         ``rep_table_pspecs`` contract over ``boundary_specs``."""
         return rep_table_pspecs(self.boundary_specs)
+
+    def table_specs(self, capacity: int) -> dict[str, tuple[int, ...]]:
+        """Full array shapes of a persistent (capacity, ...) rep-table set
+        over this split's boundary — what ``DeviceRepStore`` allocates for
+        the device-resident serving tier, and the contract it validates
+        first-put rows against."""
+        return {name: (capacity,) + tuple(shape)
+                for name, shape in self.boundary_specs.items()}
 
 
 def _split_mari_dense(n: Node, pre: set[str]) -> tuple[Node, list[Node]]:

@@ -81,6 +81,13 @@ def build_plan(args) -> ServePlan:
         over["batch__min_bucket"] = 16
     if args.compress_scores:             # store_true: only ever forces ON
         over["shard__compress_scores"] = True
+    if getattr(args, "device_resident", False):
+        # persistent device rep tables (serve/cache.DeviceRepStore). On a
+        # single-process mesh the sharded engine stores the tables with
+        # the replicated boundary shardings and skips per-pack re-stacking;
+        # multi-process engines fall back at engine level (per-process
+        # asynchronous table writes cannot stay SPMD-identical).
+        over["cache__device_resident"] = True
     return base.evolve(**over)
 
 
@@ -278,6 +285,10 @@ def main() -> int:
                     help="assert sharded == local fp32 scores bit-identically")
     ap.add_argument("--bench", action="store_true",
                     help="emit qps rows per mode")
+    ap.add_argument("--device-resident", action="store_true",
+                    help="persistent device rep tables + donated stage-2 "
+                         "buffers (single-process meshes; multi-process "
+                         "engines fall back to per-pack re-stacking)")
     ap.add_argument("--compress-scores", action="store_true",
                     help="opt-in int8-compressed score all-gather")
     ap.add_argument("--plan", default=None, metavar="PATH",

@@ -28,6 +28,13 @@ class PaperRankingConfig:
     n_tasks: int = 2               # e.g. ctr + long-view
     d_tower: tuple[int, ...] = (128, 64)
     d_user_tower: int = 256
+    # hidden widths of the user tower before the final d_user_tower layer.
+    # None keeps the classic two-layer tower (one d_user_tower hidden); a
+    # tuple like (4096, 4096, 4096) builds a deep/wide tower — the
+    # industrial regime where stage-1 reuse is worth caching, used by the
+    # serving benchmarks to measure cache-hit speedup at realistic
+    # stage-1/stage-2 cost ratios.
+    user_tower_widths: tuple[int, ...] | None = None
 
     def scaled(self, f: float) -> "PaperRankingConfig":
         s = lambda x: max(8, int(x * f))
@@ -37,7 +44,10 @@ class PaperRankingConfig:
             d_seq=s(self.d_seq), d_attn=s(self.d_attn),
             d_expert=tuple(s(x) for x in self.d_expert),
             d_tower=tuple(s(x) for x in self.d_tower),
-            d_user_tower=s(self.d_user_tower))
+            d_user_tower=s(self.d_user_tower),
+            user_tower_widths=(None if self.user_tower_widths is None
+                               else tuple(s(x)
+                                          for x in self.user_tower_widths)))
 
 
 def build_paper_ranking_model(cfg: PaperRankingConfig = PaperRankingConfig()
@@ -50,8 +60,16 @@ def build_paper_ranking_model(cfg: PaperRankingConfig = PaperRankingConfig()
     cross = b.input("cross_feats", (cfg.d_cross,), "cross")
 
     # ---- user tower (entirely one-shot under UOI) ----
-    u_hidden = b.dense("user_tower_fc1", profile, cfg.d_user_tower, activation="relu")
-    u_emb = b.dense("user_tower_fc2", u_hidden, cfg.d_user_tower, activation="relu")
+    # default: the classic fc1(d_user_tower) -> fc2(d_user_tower) pair;
+    # user_tower_widths replaces the hidden chain (layer names stay
+    # user_tower_fc1..fcN with the final layer projecting to d_user_tower)
+    widths = (cfg.user_tower_widths if cfg.user_tower_widths is not None
+              else (cfg.d_user_tower,))
+    h = profile
+    for li, width in enumerate(widths):
+        h = b.dense(f"user_tower_fc{li + 1}", h, width, activation="relu")
+    u_emb = b.dense(f"user_tower_fc{len(widths) + 1}", h, cfg.d_user_tower,
+                    activation="relu")
 
     # ---- cross attention: candidates attend to user sequence (Eq. 1) ----
     # K/V projections act on the raw (1, L, d) sequence — one-shot.

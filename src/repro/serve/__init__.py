@@ -18,7 +18,16 @@ grown into an async, multi-user subsystem:
   buckets (cross-user batching), with SLO classes — deadline-tagged
   requests jump the FIFO and shrink the linger window.
 * ``cache``   — ``UserRepCache``: bounded LRU user-representation store
-  with eviction accounting and per-user invalidation.
+  with eviction accounting, removal listeners, byte accounting and
+  per-user invalidation; ``DeviceRepStore``: the slot-allocated
+  device-resident tier over it — one live (capacity, ...) device table
+  per stage-2 boundary, donated single-row writes, slot recycling — so
+  the coalesced hot path feeds persistent tables + per-row slot indices
+  instead of re-stacking reps every call (``CachePlan.device_resident``).
+* ``profile`` — ``StageProfiler``: per-phase wall-clock taxonomy of the
+  hot path (stage1/pack/dispatch/device/unpack), threaded through the
+  engine and surfaced by ``RankingService.stats()`` and the serve bench's
+  breakdown rows.
 * ``hedging`` — ``HedgePolicy`` (rolling-p99 decision) + ``HedgedRunner``
   (real duplicate execution of straggling chunks, first result wins).
 * ``plan``    — ``ServePlan``: the frozen, validated, JSON-serializable
@@ -34,13 +43,14 @@ from repro.serve.batcher import (  # noqa: F401
     SLO_DEADLINE,
     CoalescingBatcher,
 )
-from repro.serve.cache import UserRepCache  # noqa: F401
+from repro.serve.cache import DeviceRepStore, UserRepCache  # noqa: F401
 from repro.serve.engine import (  # noqa: F401
     ServeRequest,
     ServeResult,
     ServingEngine,
 )
 from repro.serve.hedging import HedgedRunner, HedgePolicy  # noqa: F401
+from repro.serve.profile import StageProfiler  # noqa: F401
 from repro.serve.plan import (  # noqa: F401
     PRESETS,
     BatchPlan,

@@ -67,6 +67,8 @@ class _Item:
     req: ServeRequest | None = dataclasses.field(compare=False, default=None)
     fut: Future | None = dataclasses.field(compare=False, default=None)
     deadline_at: float | None = dataclasses.field(compare=False, default=None)
+    submitted_at: float | None = dataclasses.field(compare=False,
+                                                   default=None)
 
 
 class CoalescingBatcher:
@@ -97,6 +99,10 @@ class CoalescingBatcher:
         self.coalesced_requests = 0   # requests scored in a >1-request group
         self.requests = 0
         self.deadline_requests = 0    # submitted with the deadline SLO
+        # cumulative submit->handoff wait: the queueing share of end-to-end
+        # latency that the engine's StageProfiler cannot see (it starts
+        # timing only once the group reaches score_coalesced)
+        self.queue_wait_ms = 0.0
         if auto_start:
             self.start()
 
@@ -160,10 +166,12 @@ class CoalescingBatcher:
             self.requests += 1
             if slo == SLO_DEADLINE:
                 self.deadline_requests += 1
-            deadline_at = (time.perf_counter() + deadline_ms / 1e3
+            now = time.perf_counter()
+            deadline_at = (now + deadline_ms / 1e3
                            if deadline_ms is not None else None)
             self._q.put(_Item(prio=_PRIO[slo], seq=self._next_seq(),
-                              req=req, fut=fut, deadline_at=deadline_at))
+                              req=req, fut=fut, deadline_at=deadline_at,
+                              submitted_at=now))
         return fut
 
     def score_many(self, reqs: Sequence[ServeRequest],
@@ -228,6 +236,10 @@ class CoalescingBatcher:
         # its request sat queued is dropped here, and a claimed (RUNNING)
         # future can no longer be cancelled — so set_result below cannot
         # race a cancel and kill the worker with InvalidStateError
+        now = time.perf_counter()
+        self.queue_wait_ms += sum(
+            (now - it.submitted_at) * 1e3 for it in group
+            if it.submitted_at is not None)
         group = [(it.req, it.fut) for it in group
                  if it.fut.set_running_or_notify_cancel()]
         if not group:

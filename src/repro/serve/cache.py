@@ -17,14 +17,36 @@ that is an OOM, not a cache. ``UserRepCache`` is the replacement:
 * **thread safety** — the async batcher's worker thread and callers of
   ``ServingEngine.score`` touch the cache concurrently; every mutation is
   taken under one lock.
+* **removal listeners** — ``subscribe`` registers callbacks fired (outside
+  the lock) whenever a user's entry leaves the cache for ANY reason
+  (LRU eviction, version supersede, invalidation, clear). The device tier
+  below uses this to recycle its slots in lockstep with the host tier.
+
+``DeviceRepStore`` is the *device tier*: instead of re-stacking cached
+per-user rows into a fresh ``(U, ...)`` table on every bucket dispatch
+(a ``jnp.concatenate`` per boundary per call — the dominant host cost the
+benchmarks exposed), it holds ONE persistent stacked ``(capacity, ...)``
+jax array per boundary and writes a single row per new user via a donated
+``.at[slot].set`` update. Stage 2 then consumes the persistent tables with
+per-row *slot indices*; freeing a user merely recycles its slot integer —
+the stale row stays in the table but is never referenced, and the
+engine's ``mode="clip"`` gathers make even an out-of-range index safe.
 """
 from __future__ import annotations
 
 import threading
 from collections import OrderedDict
-from typing import Any, Hashable, Mapping
+from typing import Any, Callable, Hashable, Mapping, Sequence
 
 Key = tuple[Hashable, Hashable]          # (user_id, feature_version)
+
+
+def _reps_nbytes(reps: Mapping[str, Any]) -> dict[str, int]:
+    """Per-boundary byte sizes of one user's rep pytree (best effort)."""
+    out = {}
+    for k, v in reps.items():
+        out[k] = int(getattr(v, "nbytes", 0))
+    return out
 
 
 class UserRepCache:
@@ -47,6 +69,18 @@ class UserRepCache:
         self.evictions = 0               # LRU-bound evictions only
         self.hits = 0
         self.misses = 0
+        self._listeners: list[Callable[[Hashable], None]] = []
+
+    def subscribe(self, on_remove: Callable[[Hashable], None]) -> None:
+        """Register a callback fired with ``user_id`` whenever that user's
+        entry leaves the cache (eviction, supersede, invalidate, clear).
+        Callbacks run outside the cache lock."""
+        self._listeners.append(on_remove)
+
+    def _notify(self, removed: Sequence[Hashable]) -> None:
+        for uid in removed:
+            for cb in self._listeners:
+                cb(uid)
 
     def get(self, key: Key) -> Mapping[str, Any] | None:
         user_id, version = key
@@ -61,23 +95,57 @@ class UserRepCache:
 
     def put(self, key: Key, reps: Mapping[str, Any]) -> None:
         user_id, version = key
+        removed = []
         with self._lock:
             # one live entry per user: a newer feature_version overwrites
             # (and frees) the old reps rather than accumulating beside them
+            prev = self._entries.get(user_id)
+            if prev is not None and prev[0] != version:
+                removed.append(user_id)
             self._entries[user_id] = (version, reps)
             self._entries.move_to_end(user_id)
             while self.max_users is not None and len(self._entries) > self.max_users:
-                self._entries.popitem(last=False)
+                evicted, _ = self._entries.popitem(last=False)
                 self.evictions += 1
+                removed.append(evicted)
+        self._notify(removed)
 
     def invalidate_user(self, user_id: Hashable) -> int:
         """Drop the cached entry of ``user_id``; returns entries removed."""
         with self._lock:
-            return 0 if self._entries.pop(user_id, None) is None else 1
+            n = 0 if self._entries.pop(user_id, None) is None else 1
+        if n:
+            self._notify([user_id])
+        return n
 
     def clear(self) -> None:
         with self._lock:
+            removed = list(self._entries)
             self._entries.clear()
+        self._notify(removed)
+
+    def stats(self) -> dict:
+        """Occupancy + byte accounting of the host tier.
+
+        ``bytes`` is the total live-rep footprint; ``boundary_bytes`` maps
+        each boundary tensor name to its summed bytes across users — the
+        number to look at when sizing ``CachePlan.device_slots`` (the
+        device tier costs ``capacity * bytes_per_user`` up front).
+        """
+        with self._lock:
+            boundary: dict[str, int] = {}
+            for _ver, reps in self._entries.values():
+                for k, n in _reps_nbytes(reps).items():
+                    boundary[k] = boundary.get(k, 0) + n
+            return {
+                "users": len(self._entries),
+                "max_users": self.max_users,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes": sum(boundary.values()),
+                "boundary_bytes": boundary,
+            }
 
     def __len__(self) -> int:
         with self._lock:
@@ -92,3 +160,188 @@ class UserRepCache:
     def keys(self) -> list[Key]:
         with self._lock:
             return [(uid, ver) for uid, (ver, _) in self._entries.items()]
+
+
+class DeviceRepStore:
+    """Slot-allocated persistent device tables for stage-1 reps.
+
+    One stacked ``(capacity, ...)`` jax array per boundary tensor, lazily
+    allocated from the first user row (shapes validated against
+    ``boundary_specs`` when provided). ``ensure_rows`` maps
+    ``(user, version)`` keys to slot indices, writing at most one row per
+    new user via a jitted donated updater — the table buffer is reused in
+    place, so steady-state serving allocates nothing.
+
+    Slot lifecycle: ``drop`` (wired to ``UserRepCache.subscribe``) returns
+    a user's slot to the free list without touching table contents; the
+    dead row is simply unreferenced until a later user recycles the slot.
+    When every slot is pinned by the current bucket (``protect``) and none
+    is free, ``ensure_rows`` yields ``None`` for the overflow users and the
+    engine falls back to the re-stacking path for that pack.
+
+    NOT thread-safe against concurrent *dispatch*: callers must finish all
+    ``ensure_rows`` writes for a batch before launching executables that
+    read the tables (the donated writer deletes the previous table buffer).
+    ``ServingEngine`` serializes exactly this way.
+    """
+
+    def __init__(self, capacity: int,
+                 boundary_specs: Mapping[str, tuple[int, ...]] | None = None,
+                 shardings: Mapping[str, Any] | None = None):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._specs = dict(boundary_specs) if boundary_specs else None
+        self._shardings = dict(shardings) if shardings else None
+        self._tables: dict[str, Any] | None = None
+        self._writer = None
+        # user -> (version, slot); insertion order == LRU order
+        self._map: OrderedDict[Hashable, tuple[Hashable, int]] = OrderedDict()
+        self._free: list[int] = list(range(capacity - 1, -1, -1))
+        self._lock = threading.Lock()
+        self.writes = 0      # row writes (new user or version supersede)
+        self.hits = 0        # ensure_rows served from a live slot
+        self.recycles = 0    # LRU slot steals (capacity pressure)
+        self.drops = 0       # slots returned via drop()
+        self.overflows = 0   # ensure_rows rows that could not get a slot
+
+    # -- allocation ---------------------------------------------------------
+    def _alloc(self, row: Mapping[str, Any]) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        tables = {}
+        for k, v in row.items():
+            per_row = tuple(v.shape[1:])
+            if self._specs is not None:
+                spec = self._specs.get(k)
+                if spec is not None and per_row != tuple(spec):
+                    raise ValueError(
+                        f"boundary {k!r}: rep row shape {per_row} does not "
+                        f"match the split's boundary spec {tuple(spec)}")
+            tables[k] = jnp.zeros((self.capacity,) + per_row, dtype=v.dtype)
+        if self._shardings is not None:
+            tables = {k: jax.device_put(t, self._shardings[k])
+                      if k in self._shardings else t
+                      for k, t in tables.items()}
+
+        def _write(tabs, reps, slot):
+            return {k: tabs[k].at[slot].set(reps[k][0]) for k in tabs}
+
+        kwargs = {}
+        if self._shardings is not None:
+            kwargs["out_shardings"] = {
+                k: self._shardings.get(k) for k in tables}
+        # donate_argnums=0: the previous table generation is consumed in
+        # place — a row write costs one row's bandwidth, not a table copy
+        self._writer = jax.jit(_write, donate_argnums=0, **kwargs)
+        self._tables = tables
+
+    # -- slot resolution ----------------------------------------------------
+    def ensure_rows(self, items: Sequence[tuple[Hashable, Hashable,
+                                                Mapping[str, Any]]],
+                    protect: Sequence[Hashable] = ()) -> list[int | None]:
+        """Resolve ``(user, version, reps)`` triples to device slots.
+
+        Live ``(user, version)`` entries are LRU-bumped and reused without
+        a write; new users take a free slot (or steal the LRU slot not in
+        ``protect``) and get exactly one donated row write. Returns one
+        slot per item, ``None`` where capacity ran out.
+
+        MUST complete before any executable that reads ``tables`` is
+        launched for this batch — see the class docstring.
+        """
+        import numpy as np
+        protected = set(protect)
+        slots: list[int | None] = []
+        with self._lock:
+            for user, version, reps in items:
+                entry = self._map.get(user)
+                if entry is not None and entry[0] == version:
+                    self._map.move_to_end(user)
+                    self.hits += 1
+                    slots.append(entry[1])
+                    continue
+                if entry is not None:
+                    # version supersede: rewrite the user's own slot
+                    slot = entry[1]
+                elif self._free:
+                    slot = self._free.pop()
+                else:
+                    slot = self._steal_lru(protected)
+                    if slot is None:
+                        self.overflows += 1
+                        slots.append(None)
+                        continue
+                try:
+                    if self._tables is None:
+                        self._alloc(reps)
+                    self._tables = self._writer(self._tables, dict(reps),
+                                                np.int32(slot))
+                except Exception:
+                    # a failed alloc/write (e.g. a rep row violating the
+                    # boundary spec) must not leak the slot it claimed; a
+                    # version supersede keeps its old entry (the previous
+                    # row is still intact — the writer is all-or-nothing)
+                    if entry is None:
+                        self._free.append(slot)
+                    raise
+                self.writes += 1
+                self._map[user] = (version, slot)
+                self._map.move_to_end(user)
+                protected.add(user)
+                slots.append(slot)
+        return slots
+
+    def _steal_lru(self, protected: set) -> int | None:
+        for user in self._map:          # iterates LRU -> MRU
+            if user not in protected:
+                _, slot = self._map.pop(user)
+                self.recycles += 1
+                return slot
+        return None
+
+    # -- lifecycle ----------------------------------------------------------
+    def drop(self, user: Hashable) -> None:
+        """Recycle ``user``'s slot (cache eviction/invalidation hook).
+        The table row is left as-is: dead slots are never referenced, and
+        stage-2 gathers clamp, so no zeroing pass is needed."""
+        with self._lock:
+            entry = self._map.pop(user, None)
+            if entry is not None:
+                self._free.append(entry[1])
+                self.drops += 1
+
+    def slot_of(self, user: Hashable) -> int | None:
+        with self._lock:
+            entry = self._map.get(user)
+            return None if entry is None else entry[1]
+
+    @property
+    def tables(self) -> dict[str, Any] | None:
+        """The live per-boundary ``(capacity, ...)`` tables (None until the
+        first write). Callers must treat the dict and its arrays as
+        read-only and must not retain them across ``ensure_rows`` calls —
+        the donated writer deletes superseded buffers."""
+        return self._tables
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._map)
+
+    def stats(self) -> dict:
+        with self._lock:
+            boundary = ({k: int(t.nbytes) for k, t in self._tables.items()}
+                        if self._tables is not None else {})
+            return {
+                "capacity": self.capacity,
+                "resident": len(self._map),
+                "free_slots": len(self._free),
+                "writes": self.writes,
+                "hits": self.hits,
+                "recycles": self.recycles,
+                "drops": self.drops,
+                "overflows": self.overflows,
+                "bytes": sum(boundary.values()),
+                "boundary_bytes": boundary,
+            }

@@ -48,6 +48,42 @@ Two runtime-dependent adjustments stay here rather than in the plan: a
 multi-process 'cand' mesh forces ``hedging`` off (per-process duplicates
 would desynchronize the SPMD collective schedule), and a sharded engine
 rounds ``max_batch`` down to a shard-divisible power of two.
+
+Hot-path dispatch (``plan.cache.device_resident``) — the allocation-free
+stage-2 pipeline:
+
+* **device-resident rep tables** — cached stage-1 reps live in a
+  slot-allocated ``DeviceRepStore``: ONE persistent ``(capacity, ...)``
+  jax array per boundary, new users written as single donated
+  ``.at[slot].set`` rows, evicted users merely recycling their slot
+  integer. ``score_coalesced`` passes the persistent tables plus per-row
+  *device slots* instead of re-concatenating a fresh ``(U, ...)`` table
+  per bucket; the engine's ``mode="clip"`` gathers make dead or stale
+  slots safe by construction.
+* **donated bucket buffers** — candidate rows and the user index are
+  filled into reusable per-bucket host staging buffers (padding is one
+  masked tail write), transferred, and donated to the stage-2 executable
+  (``donate_argnums``), so steady-state serving performs zero fresh
+  device allocations. Donated arguments are consumed: callers must never
+  retain them, which is why ``device_resident`` forces ``hedging`` off
+  (a hedged duplicate would replay deleted buffers — resolved at plan
+  construction).
+* **async unpack** — launches are non-blocking and the call is a
+  pipeline: after the table-write barrier, each pack is prepared and
+  launched in turn, so the host packs bucket k+1 while the device
+  computes bucket k; no result is blocked on until every pack is in
+  flight, and scores materialize only when the reply is assembled.
+* **stage profiler** — ``repro.serve.profile.StageProfiler`` splits every
+  call into stage1 / pack / dispatch / device / unpack, surfaced via
+  ``RankingService.stats()`` and the ``serve/<mode>/breakdown`` benchmark
+  rows.
+
+Ordering contract: every device-table row write of a call completes
+before any stage-2 launch of that call, and every result is materialized
+before the call returns — so the donated table writer can never delete a
+buffer an in-flight executable still reads. Concurrent direct callers
+must serialize ``score``/``score_coalesced`` themselves (the batcher's
+single worker thread already does).
 """
 from __future__ import annotations
 
@@ -65,9 +101,10 @@ from repro.core.mari import mari_rewrite, convert_params
 from repro.core.split import split_two_stage
 from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
-from repro.serve.cache import UserRepCache
+from repro.serve.cache import DeviceRepStore, UserRepCache
 from repro.serve.hedging import HedgedRunner, HedgePolicy
 from repro.serve.plan import ServePlan
+from repro.serve.profile import StageProfiler
 
 
 @dataclasses.dataclass
@@ -308,6 +345,42 @@ class ServingEngine:
         # falls back to the jnp.take oracle off-TPU, so scores are identical
         # either way — only the memory profile needs the kernel
         self.gather_attention = gather_attention
+
+        # -- rep cache + device tier (before _build_rowwise: stage-2 buffer
+        # donation is only sound on the device-resident staging path) --
+        # single-stage serving has no stage-1 outputs to reuse — the
+        # "representation" is the raw feed dict, rebuilt per request — so
+        # cache get/put there is pure bookkeeping overhead on the hot path
+        # (BENCH_serve showed vani hit at 0.97x of cold); make it a no-op
+        self.cache_user_reps = plan.cache.cache_user_reps and self.two_stage
+        # an injected cache is SHARED (RankingService budget); cache_scope
+        # namespaces this engine's keys inside it so same-valued user ids
+        # from different scenarios cannot collide on wrong-shaped reps
+        self.cache = cache if cache is not None else UserRepCache(
+            max_users=plan.cache.max_cached_users)
+        self._cache_scope = cache_scope
+        # multi-process SPMD: every process would need the identical global
+        # table state across asynchronous per-process writes — the device
+        # tier stays off and packs re-stack replicated tables as before
+        self.device_resident = (plan.cache.device_resident
+                                and self.cache_user_reps
+                                and not self._multiproc)
+        self._device_store = None
+        if self.device_resident:
+            capacity = (plan.cache.device_slots
+                        if plan.cache.device_slots is not None
+                        else (plan.cache.max_cached_users or 64))
+            table_shardings = (self._in_shardings[1]
+                               if self._in_shardings is not None else None)
+            self._device_store = DeviceRepStore(
+                capacity, boundary_specs=self.split.boundary_specs,
+                shardings=table_shardings)
+            # recycle device slots in lockstep with the host tier: any
+            # removal (LRU eviction, version supersede, invalidate, clear)
+            # frees the user's slot for the next resident user
+            self.cache.subscribe(self._device_store.drop)
+        self._donate_stage2 = self.device_resident
+
         self._stage2 = self._build_rowwise(batched_graph, exec_mode,
                                            use_pallas)
         # multi-process: stage 2 consumes params as a globalized replica on
@@ -331,18 +404,12 @@ class ServingEngine:
         self.stage1_calls = 0                 # trace counter for the split test
         self.stage2_calls = 0                 # total row-wise dispatches
         self.coalesced_calls = 0              # dispatches mixing >1 user slot
-        self._batch_shapes: set[tuple[int, int]] = set()  # (U_pad, bucket)
-        # single-stage serving has no stage-1 outputs to reuse — the
-        # "representation" is the raw feed dict, rebuilt per request — so
-        # cache get/put there is pure bookkeeping overhead on the hot path
-        # (BENCH_serve showed vani hit at 0.97x of cold); make it a no-op
-        self.cache_user_reps = plan.cache.cache_user_reps and self.two_stage
-        # an injected cache is SHARED (RankingService budget); cache_scope
-        # namespaces this engine's keys inside it so same-valued user ids
-        # from different scenarios cannot collide on wrong-shaped reps
-        self.cache = cache if cache is not None else UserRepCache(
-            max_users=plan.cache.max_cached_users)
-        self._cache_scope = cache_scope
+        self._batch_shapes: set[tuple[int, int]] = set()  # (U_dim, bucket)
+        # per-bucket host staging buffers: (uidx, {cand name -> buffer}).
+        # Transfers copy, so one buffer set per bucket serves every pack.
+        self._staging: dict[int, tuple[np.ndarray, dict[str, np.ndarray]]] \
+            = {}
+        self.profiler = StageProfiler()
         self.hedge_policy = hedge_policy or HedgePolicy()
         self.hedging = hedging
         self._hedged = (HedgedRunner(self._dispatch, self.hedge_policy)
@@ -395,6 +462,13 @@ class ServingEngine:
         if self._in_shardings is not None:
             kwargs = dict(in_shardings=self._in_shardings,
                           out_shardings=self._out_shardings)
+        if self._donate_stage2:
+            # donated bucket buffers: user_index + candidate feeds are
+            # single-use staging transfers under the device-resident path,
+            # so XLA may alias their device buffers for outputs/temporaries
+            # (zero fresh allocations in steady state). params and the
+            # persistent rep tables are never donated — they outlive calls.
+            kwargs["donate_argnums"] = (2, 3)
         return jax.jit(fn, **kwargs)
 
     # -- candidate mini-batching --------------------------------------------
@@ -409,13 +483,16 @@ class ServingEngine:
 
     def _chunk(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
         """Split a candidate pool into raw (chunk, n_valid) pieces of at most
-        ``max_batch`` rows. Padding happens per *pack* (possibly shared with
-        other users' chunks), not per chunk."""
-        n = next(iter(feeds.values())).shape[0]
+        ``max_batch`` rows. Chunks are host numpy views — packing copies
+        them straight into the per-bucket staging buffers, so no per-chunk
+        device arrays are ever created. Padding happens per *pack*
+        (possibly shared with other users' chunks), not per chunk."""
+        arrs = {k: np.asarray(v) for k, v in feeds.items()}
+        n = next(iter(arrs.values())).shape[0]
         out = []
         for lo in range(0, n, self.max_batch):
             hi = min(lo + self.max_batch, n)
-            out.append(({k: v[lo:hi] for k, v in feeds.items()}, hi - lo))
+            out.append(({k: v[lo:hi] for k, v in arrs.items()}, hi - lo))
         return out
 
     @property
@@ -431,6 +508,11 @@ class ServingEngine:
     def cache_evictions(self) -> int:
         """User-rep entries dropped by the LRU bound (capacity signal)."""
         return self.cache.evictions
+
+    @property
+    def device_store(self) -> DeviceRepStore | None:
+        """The device rep tier (None unless ``device_resident`` is live)."""
+        return self._device_store
 
     # -- stage 1: user-side partial evaluation ------------------------------
     def _scoped_uid(self, user_id: Hashable) -> Hashable:
@@ -453,6 +535,7 @@ class ServingEngine:
             jax.block_until_ready(reps)
             self.stage1_calls += 1
             ms = (time.perf_counter() - t0) * 1e3
+            self.profiler.add("stage1", ms / 1e3)
         else:
             # single-stage: the "representation" is the raw user feed dict
             # (never cached — cache_user_reps is forced off above: there is
@@ -471,8 +554,17 @@ class ServingEngine:
     def score_coalesced(self, reqs: Sequence[ServeRequest]
                         ) -> list[ServeResult]:
         """Score several users' requests, coalescing candidate chunks that
-        share a power-of-two bucket into single cross-user stage-2 calls."""
+        share a power-of-two bucket into single cross-user stage-2 calls.
+
+        The call runs as a write barrier followed by a pipeline: ALL
+        device-table row writes happen first (so donated table
+        generations are never deleted under an in-flight executable),
+        then packs are prepared-and-launched one by one — launches are
+        non-blocking, so the host packs bucket k+1 while the device
+        computes bucket k — and a final collect sweep blocks,
+        materializes, and slices per-request views (async unpack)."""
         t0 = time.perf_counter()
+        prof = self.profiler
         infos: list[_ReqInfo] = []
         for ri, req in enumerate(reqs):
             reps, hit, s1ms = self._user_reps(req)
@@ -493,11 +585,13 @@ class ServingEngine:
         # requests as fit the row budget and the slot budget
         items = [(ri, chunk, n) for ri, info in enumerate(infos)
                  for chunk, n in info.chunks]
-        packs: list[tuple[list, list]] = []    # (items w/ slot idx, slot reps)
+        # (items w/ slot idx, slot reps, slot cache keys)
+        packs: list[tuple[list, list, list]] = []
         cur: list = []
         cur_rows = 0
         cur_slots: dict = {}                   # slot_key -> slot index
         cur_reps: list = []                    # slot index -> reps
+        cur_keys: list = []                    # slot index -> slot_key
         for ri, chunk, n in items:
             key = infos[ri].slot_key
             full = cur and (
@@ -505,21 +599,48 @@ class ServingEngine:
                 or (key not in cur_slots
                     and len(cur_slots) >= self.max_users_per_batch))
             if full:
-                packs.append((cur, cur_reps))
-                cur, cur_rows, cur_slots, cur_reps = [], 0, {}, []
+                packs.append((cur, cur_reps, cur_keys))
+                cur, cur_rows, cur_slots = [], 0, {}
+                cur_reps, cur_keys = [], []
             if key not in cur_slots:
                 cur_slots[key] = len(cur_reps)
                 cur_reps.append(infos[ri].reps)
+                cur_keys.append(key)
             cur.append((ri, cur_slots[key], chunk, n))
             cur_rows += n
         if cur:
-            packs.append((cur, cur_reps))
+            packs.append((cur, cur_reps, cur_keys))
 
+        # write barrier: EVERY donated table-row write of the call happens
+        # here, before any launch — a row write deletes the previous table
+        # generation, which must never happen under an in-flight executable
+        with prof.phase("pack"):
+            dslots = self._resolve_device_slots(packs)
+
+        # pipelined prepare+launch: launches are non-blocking (unless
+        # hedging owns the dispatch), so the staging fill + transfer of
+        # pack k+1 overlaps the device compute of pack k. Safe against the
+        # shared staging buffers because transfers copy (_prepare_pack).
+        launched = []
+        for (pack_items, slot_reps, _), ds in zip(packs, dslots):
+            with prof.phase("pack"):
+                prep = self._prepare_pack(pack_items, slot_reps, ds)
+            launched.append(self._launch_pack(prep))
+
+        # collect sweep: block on device, materialize, slice per request
         per_req_scores: list[list[np.ndarray]] = [[] for _ in reqs]
         per_req_packs = [0] * len(reqs)
         per_req_hedged = [0] * len(reqs)
-        for pack_items, slot_reps in packs:
-            scores, hedged = self._run_pack(pack_items, slot_reps)
+        for (pack_items, _, _), (out, hedged, blocked) in zip(packs,
+                                                              launched):
+            total = sum(n for _, _, _, n in pack_items)
+            if not blocked:
+                with prof.phase("device"):
+                    jax.block_until_ready(out)
+            with prof.phase("unpack"):
+                scores = np.concatenate(
+                    [np.asarray(out[o]) for o in self.outputs],
+                    axis=-1)[:total]
             touched = set()
             offset = 0
             for ri, _, _, n in pack_items:
@@ -538,87 +659,157 @@ class ServingEngine:
             stage1_ms=infos[ri].stage1_ms, coalesced=len(reqs) > 1)
             for ri in range(len(reqs))]
 
-    def _run_pack(self, pack_items: list, slot_reps: list
-                  ) -> tuple[np.ndarray, int]:
-        """Execute one (possibly cross-user) stage-2 call.
+    # -- pack preparation ----------------------------------------------------
+    def _resolve_device_slots(self, packs: list) -> list[list[int] | None]:
+        """Map every pack's slot keys to device-table slots (one donated
+        row write per user not already resident). ``None`` per pack when
+        the device tier is off or that pack overflowed capacity — the pack
+        then falls back to the re-stacking path, bit-identically.
 
-        ``pack_items`` is a list of (req idx, slot idx, cand chunk, n_valid);
-        ``slot_reps`` maps slot idx -> that user's rep dict (each entry a
-        batch-1 array). Returns (scores for the valid rows, hedged count).
-        """
+        Every user of the CALL is protected while resolving: a later
+        pack's write may never steal a slot an earlier (already prepared)
+        pack still references."""
+        if self._device_store is None:
+            return [None] * len(packs)
+        per_pack = []
+        protect: list = []
+        for _, slot_reps, slot_keys in packs:
+            # with the device tier live, cache_user_reps is on, so every
+            # slot key is a (user_id, feature_version) cache key
+            triples = [(self._scoped_uid(uid), ver, reps)
+                       for (uid, ver), reps in zip(slot_keys, slot_reps)]
+            per_pack.append(triples)
+            protect.extend(u for u, _, _ in triples)
+        out = []
+        for triples in per_pack:
+            slots = self._device_store.ensure_rows(triples, protect=protect)
+            out.append(slots if all(s is not None for s in slots) else None)
+        return out
+
+    def _staging_buffers(self, bucket: int, sample_chunk: Mapping
+                         ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
+        st = self._staging.get(bucket)
+        if st is None:
+            st = (np.empty((bucket,), np.int32),
+                  {k: np.empty((bucket,) + tuple(v.shape[1:]), v.dtype)
+                   for k, v in sample_chunk.items()})
+            self._staging[bucket] = st
+        return st
+
+    def _prepare_pack(self, pack_items: list, slot_reps: list,
+                      dslots: list[int] | None):
+        """Assemble one stage-2 call's arguments.
+
+        ``pack_items`` is a list of (req idx, slot idx, cand chunk,
+        n_valid); ``slot_reps`` maps slot idx -> that user's rep dict;
+        ``dslots`` maps slot idx -> persistent device-table slot (or None
+        for the re-stacking path). Candidate rows and the user index are
+        filled into reusable per-bucket staging buffers — padding is one
+        masked tail write — then transferred (transfers copy, so the
+        buffers are immediately reusable)."""
         total = sum(n for _, _, _, n in pack_items)
         bucket = self._bucket(total)
-        pad = bucket - total
-
-        # rep table: one row-block per slot, padded to a pow2 slot count so
-        # the executable family stays small
         n_slots = len(slot_reps)
-        u_pad = _next_pow2(n_slots)
-        if n_slots == 1 and u_pad == 1:
-            table = dict(slot_reps[0])
+
+        if dslots is not None:
+            # device-resident: pass the persistent (capacity, ...) tables;
+            # rows address their user's live device slot directly
+            table = self._device_store.tables
+            u_dim = self._device_store.capacity
+            slot_ids = dslots
         else:
-            padded = slot_reps + [slot_reps[0]] * (u_pad - n_slots)
-            table = {k: jnp.concatenate([r[k] for r in padded], axis=0)
-                     for k in slot_reps[0]}
+            # re-stack a fresh table: one row-block per slot, padded to a
+            # pow2 slot count so the executable family stays small
+            u_dim = _next_pow2(n_slots)
+            if n_slots == 1 and u_dim == 1:
+                table = dict(slot_reps[0])
+            else:
+                padded = slot_reps + [slot_reps[0]] * (u_dim - n_slots)
+                table = {k: jnp.concatenate([r[k] for r in padded], axis=0)
+                         for k in slot_reps[0]}
+            slot_ids = list(range(n_slots))
 
-        # padding rows duplicate the LAST real row exactly — its user slot
-        # here, its candidate row below — so pad scores are copies of a
-        # real score (a cross-user slot-0/tail-candidate combination could
-        # exceed max|real score| and inflate the compress_scores int8
-        # quantization scale past the verified error bound)
-        uidx = np.full((bucket,), pack_items[-1][1], np.int32)
+        uidx_buf, cand_bufs = self._staging_buffers(bucket,
+                                                    pack_items[0][2])
         offset = 0
-        for _, slot, _, n in pack_items:
-            uidx[offset:offset + n] = slot
+        for _, slot, chunk, n in pack_items:
+            uidx_buf[offset:offset + n] = slot_ids[slot]
+            for k, buf in cand_bufs.items():
+                buf[offset:offset + n] = chunk[k]
             offset += n
+        if offset < bucket:
+            # padding rows duplicate the LAST real row exactly — user slot
+            # and candidate row — in one masked tail write per buffer, so
+            # pad scores are copies of a real score (a cross-user slot-0 /
+            # tail-candidate combination could exceed max|real score| and
+            # inflate the compress_scores int8 quantization scale past the
+            # verified error bound)
+            uidx_buf[offset:] = uidx_buf[offset - 1]
+            for buf in cand_bufs.values():
+                buf[offset:] = buf[offset - 1]
 
-        cand = {}
-        last_chunk = pack_items[-1][2]
-        for k in last_chunk:
-            xs = [chunk[k] for _, _, chunk, _ in pack_items]
-            if pad:
-                tail = last_chunk[k][-1:]      # repeat the final valid row
-                xs.append(jnp.broadcast_to(tail, (pad,) + tail.shape[1:]))
-            cand[k] = jnp.concatenate(xs, axis=0) if len(xs) > 1 else xs[0]
-
+        # transfers MUST own their memory: jnp.array(copy=True). On the CPU
+        # backend a jnp.asarray/device_put of an aligned numpy buffer is
+        # zero-copy — it would alias the staging buffer, and the next pack's
+        # refill (or XLA itself, under donation) would corrupt an enqueued
+        # argument. One memcpy per bucket is the price of buffer reuse.
         if self._multiproc:
             # SPMD: every process holds the identical host values; lift
             # them onto the cross-process mesh (replicated tables, sharded
             # candidate rows + index)
             repl, _, shard, _ = self._in_shardings
             table = {k: self._globalize(v, repl) for k, v in table.items()}
-            cand = {k: self._globalize(v, shard) for k, v in cand.items()}
-            uidx_arr = self._globalize(uidx, shard)
+            cand = {k: self._globalize(v.copy(), shard)
+                    for k, v in cand_bufs.items()}
+            uidx_arr = self._globalize(uidx_buf.copy(), shard)
         else:
-            uidx_arr = jnp.asarray(uidx)
+            cand = {k: jnp.array(v) for k, v in cand_bufs.items()}
+            uidx_arr = jnp.array(uidx_buf)
 
         # first call at a new (rep-table, bucket) signature compiles — that
         # is not a straggler, so hedging would only duplicate the compile
-        first_shape = (u_pad, bucket) not in self._batch_shapes
-        self._batch_shapes.add((u_pad, bucket))
+        first_shape = (u_dim, bucket) not in self._batch_shapes
+        self._batch_shapes.add((u_dim, bucket))
+        return table, uidx_arr, cand, n_slots, first_shape
+
+    # -- dispatch ------------------------------------------------------------
+    def _launch_pack(self, prep) -> tuple[dict, int, bool]:
+        """Launch one prepared pack. Returns (outputs, hedged count,
+        blocked) — ``blocked`` marks results already materialized (the
+        hedging path owns its own latency observation and must see final
+        latencies, so it stays blocking)."""
+        table, uidx_arr, cand, n_slots, first_shape = prep
         self.stage2_calls += 1
         if n_slots > 1:
             self.coalesced_calls += 1
+        prof = self.profiler
         if self._hedged is not None and not first_shape:
-            out, outcome = self._hedged.run(
-                self._params_s2, table, uidx_arr, cand)
-            hedged = int(outcome.hedged)
-        else:
-            tb = time.perf_counter()
-            out = self._dispatch(self._params_s2, table, uidx_arr, cand)
-            if not first_shape:   # compile latency would poison the window
-                self.hedge_policy.observe((time.perf_counter() - tb) * 1e3)
-            hedged = 0
-        scores = np.concatenate(
-            [np.asarray(out[o]) for o in self.outputs], axis=-1)[:total]
-        return scores, hedged
+            with prof.phase("dispatch"):
+                out, outcome = self._hedged.run(
+                    self._params_s2, table, uidx_arr, cand)
+            return out, int(outcome.hedged), True
+        with prof.phase("dispatch"):
+            out = self._execute(self._params_s2, table, uidx_arr, cand)
+        if self._hedged is not None:
+            # compile call of a hedging engine: block here (latency would
+            # poison the policy window, so it is not observed either)
+            with prof.phase("device"):
+                jax.block_until_ready(out)
+            return out, 0, True
+        return out, 0, False
 
-    def _dispatch(self, params, table, uidx, cand):
+    def _execute(self, params, table, uidx, cand):
+        """Enqueue stage 2 (+ optional compressed gather) WITHOUT blocking:
+        results stay on device until the collect sweep materializes them."""
         out = self._stage2(params, table, uidx, cand)
         if self._cgather is not None:
             # opt-in int8 result collection: the only cross-shard movement
             # of the step runs quantized (repro.dist.compress)
             out = {k: self._cgather(v) for k, v in out.items()}
+        return out
+
+    def _dispatch(self, params, table, uidx, cand):
+        out = self._execute(params, table, uidx, cand)
         jax.block_until_ready(out)
         return out
 

@@ -21,7 +21,8 @@ Sections (each its own frozen dataclass):
 * ``ShardPlan``  — candidate-axis sharding: ``shard_candidates``
   (False / True / shard count), ``compress_scores``;
 * ``CachePlan``  — user-rep store: ``cache_user_reps``,
-  ``max_cached_users``.
+  ``max_cached_users``, ``device_resident`` (persistent slot-allocated
+  device rep tables + donated stage-2 buffers), ``device_slots``.
 
 Validation happens AT CONSTRUCTION — an invalid combination is either
 rejected (``PlanError``) or auto-resolved with a ``PlanResolutionWarning``
@@ -40,8 +41,25 @@ combination                                           resolution
                                                       user-only stage
 non-positive ``max_batch`` / ``min_bucket`` /         reject
 ``max_users_per_batch`` / ``max_coalesce`` /
-``max_cached_users``; negative ``linger_ms`` /
-shard count; ``deadline_linger_frac`` outside [0, 1]
+``max_cached_users`` / ``device_slots``; negative
+``linger_ms`` / shard count;
+``deadline_linger_frac`` outside [0, 1]
+``device_resident`` without ``cache_user_reps``       drop
+                                                      ``device_resident``
+                                                      + warn (the device
+                                                      tier mirrors cached
+                                                      reps; with no cache
+                                                      there is nothing to
+                                                      keep resident)
+``device_resident`` with ``hedging``                  drop ``hedging`` +
+                                                      warn — hedged
+                                                      duplicates replay
+                                                      arguments the donated
+                                                      stage-2 buffers have
+                                                      already consumed
+``device_slots`` without ``device_resident``          drop ``device_slots``
+                                                      + warn (it sizes the
+                                                      device tier only)
 ``kernel_gather`` without ``use_pallas``              drop ``kernel_gather``
                                                       + warn (the rep-table
                                                       gather only exists
@@ -130,9 +148,13 @@ class ShardPlan:
 
 @dataclasses.dataclass(frozen=True)
 class CachePlan:
-    """Bounded LRU user-representation store."""
+    """Bounded LRU user-representation store + optional device tier."""
     cache_user_reps: bool = True
     max_cached_users: int | None = None    # None = unbounded
+    device_resident: bool = False          # persistent device rep tables +
+    #                                        donated stage-2 buffers
+    device_slots: int | None = None        # device-tier capacity; None =
+    #                                        max_cached_users (or 64)
 
 
 _SECTIONS: dict[str, type] = {"graph": GraphPlan, "kernel": KernelPlan,
@@ -182,7 +204,8 @@ _FIELD_TYPES: dict[str, dict[str, str]] = {
               "linger_ms": "num", "max_coalesce": "int",
               "deadline_linger_frac": "num"},
     "shard": {"shard_candidates": "bool_or_int", "compress_scores": "bool"},
-    "cache": {"cache_user_reps": "bool", "max_cached_users": "int?"},
+    "cache": {"cache_user_reps": "bool", "max_cached_users": "int?",
+              "device_resident": "bool", "device_slots": "int?"},
 }
 
 
@@ -278,6 +301,9 @@ class ServePlan:
         _require(c.max_cached_users is None or c.max_cached_users >= 1,
                  f"max_cached_users must be >= 1 (or None for unbounded), "
                  f"got {c.max_cached_users}")
+        _require(c.device_slots is None or c.device_slots >= 1,
+                 f"device_slots must be >= 1 (or None to follow "
+                 f"max_cached_users), got {c.device_slots}")
 
         # auto-resolutions: drop the no-op knob and say why (the previously
         # SILENT combos of the pre-plan engine)
@@ -313,6 +339,33 @@ class ServePlan:
                 self, "graph",
                 dataclasses.replace(self.graph,
                                     **{n: False for n in rewrite_knobs}))
+        if c.device_resident and not c.cache_user_reps:
+            notes.append(
+                "device_resident without cache_user_reps: the device tier "
+                "mirrors cached stage-1 reps — with caching off there is "
+                "nothing to keep resident; resolved to device_resident="
+                "False")
+            object.__setattr__(self, "cache",
+                               dataclasses.replace(self.cache,
+                                                   device_resident=False))
+            c = self.cache
+        if c.device_resident and b.hedging:
+            notes.append(
+                "device_resident with hedging: hedged duplicates replay "
+                "arguments that the donated stage-2 buffers have already "
+                "consumed — resolved to hedging=False")
+            object.__setattr__(self, "batch",
+                               dataclasses.replace(self.batch,
+                                                   hedging=False))
+            b = self.batch
+        if c.device_slots is not None and not c.device_resident:
+            notes.append(
+                "device_slots without device_resident: it sizes the device "
+                "rep tier only — resolved to device_slots=None")
+            object.__setattr__(self, "cache",
+                               dataclasses.replace(self.cache,
+                                                   device_slots=None))
+            c = self.cache
         # silent normalization (the engine's long-standing contract): the
         # smallest bucket can never exceed the row budget
         if b.min_bucket > b.max_batch:

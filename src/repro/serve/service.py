@@ -184,26 +184,31 @@ class RankingService:
 
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:
-        """Per-scenario serving counters + the shared cache's state."""
+        """Per-scenario serving counters (including the stage-boundary
+        profile and the device rep tier, when live) + the shared cache's
+        state with byte accounting — ``shared_cache.boundary_bytes`` is
+        the number to read when sizing ``CachePlan.device_slots``."""
         return {
             "scenarios": {
                 s.name: {
                     "preset": s.plan.preset_name(),
                     "mode": s.engine.mode,
                     "two_stage": s.engine.two_stage,
+                    "device_resident": s.engine.device_resident,
                     "requests": s.batcher.requests,
                     "batches": s.batcher.batches,
                     "coalesced_requests": s.batcher.coalesced_requests,
+                    "queue_wait_ms": s.batcher.queue_wait_ms,
                     "stage1_calls": s.engine.stage1_calls,
                     "stage2_calls": s.engine.stage2_calls,
+                    "profile": s.engine.profiler.snapshot(),
+                    "device_store": (s.engine.device_store.stats()
+                                     if s.engine.device_store is not None
+                                     else None),
                 } for s in self._scenarios.values()},
-            "shared_cache": {
-                "users": len(self.shared_cache),
-                "max_users": self.shared_cache.max_users,
-                "hits": self.shared_cache.hits,
-                "misses": self.shared_cache.misses,
-                "evictions": self.shared_cache.evictions,
-            },
+            # host-tier stats() carries users/max_users/hits/misses/
+            # evictions plus bytes + per-boundary bytes
+            "shared_cache": self.shared_cache.stats(),
         }
 
     # -- lifecycle ----------------------------------------------------------

@@ -239,6 +239,46 @@ class TestResolutionTable:
         assert rt == plan
 
 
+class TestDeviceResidentPlan:
+    """The ``CachePlan.device_resident`` knob follows the same spine rules
+    as every other plan field: validated scalars, documented resolutions,
+    idempotent through JSON."""
+
+    def test_bad_device_slots_rejected(self):
+        with pytest.raises(PlanError, match="device_slots"):
+            ServePlan(cache=CachePlan(device_resident=True, device_slots=0))
+
+    def test_device_resident_without_cache_resolves_off(self):
+        with pytest.warns(PlanResolutionWarning, match="device_resident"):
+            plan = ServePlan(cache=CachePlan(cache_user_reps=False,
+                                             device_resident=True))
+        assert not plan.cache.device_resident
+        assert plan.resolution_notes
+
+    def test_device_resident_drops_hedging(self):
+        # BatchPlan defaults hedging=True; the device tier wins (hedged
+        # duplicates would replay donated dispatches)
+        with pytest.warns(PlanResolutionWarning, match="hedging"):
+            plan = ServePlan(cache=CachePlan(device_resident=True))
+        assert plan.cache.device_resident
+        assert not plan.batch.hedging
+
+    def test_device_slots_without_device_resident_dropped(self):
+        with pytest.warns(PlanResolutionWarning, match="device_slots"):
+            plan = ServePlan(cache=CachePlan(device_slots=8))
+        assert plan.cache.device_slots is None
+
+    def test_valid_combo_silent_and_roundtrips(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            plan = ServePlan(batch=BatchPlan(hedging=False),
+                             cache=CachePlan(device_resident=True,
+                                             device_slots=32))
+            rt = ServePlan.from_json(plan.to_json())
+        assert rt == plan
+        assert rt.cache.device_resident and rt.cache.device_slots == 32
+
+
 class TestLegacyShim:
     """ServingEngine(**kwargs) still works: it builds the equivalent plan,
     emits a DeprecationWarning, and fails fast on the combos that used to
@@ -432,3 +472,31 @@ class TestRankingService:
                                   jax.random.PRNGKey(seed))
         uf, cf = svc.split_feeds(sc, feeds)
         return ServeRequest(user_id=seed, user_feeds=uf, candidate_feeds=cf)
+
+    def test_stats_expose_profile_and_device_store(self, svc_plan):
+        """Observability contract of this subsystem: per-scenario stats
+        carry the stage-boundary profile, queue wait, the device-tier
+        counters, and the shared cache's byte accounting."""
+        plan = svc_plan.evolve(cache__device_resident=True)
+        with RankingService(plan, smoke=True, seed=0) as svc:
+            svc.register("din")
+            svc.score("din", self._req_for(svc, "din", seed=3))
+            st = svc.stats()
+            sc = st["scenarios"]["din"]
+            assert sc["device_resident"] is True
+            prof = sc["profile"]
+            assert set(prof) == {"stage1", "pack", "dispatch", "device",
+                                 "unpack"}
+            assert prof["pack"]["calls"] >= 1
+            assert prof["pack"]["total_ms"] >= 0.0
+            ds = sc["device_store"]
+            assert ds["resident"] == 1 and ds["writes"] == 1
+            assert ds["bytes"] > 0
+            assert set(ds["boundary_bytes"]) == set(
+                svc.engine("din").split.boundary)
+            assert sc["queue_wait_ms"] >= 0.0
+            # host-tier byte accounting mirrors the same boundary names
+            cache_stats = st["shared_cache"]
+            assert cache_stats["bytes"] > 0
+            assert set(cache_stats["boundary_bytes"]) == set(
+                svc.engine("din").split.boundary)
