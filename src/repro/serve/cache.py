@@ -74,12 +74,21 @@ class UserRepCache:
     def subscribe(self, on_remove: Callable[[Hashable], None]) -> None:
         """Register a callback fired with ``user_id`` whenever that user's
         entry leaves the cache (eviction, supersede, invalidate, clear).
-        Callbacks run outside the cache lock."""
-        self._listeners.append(on_remove)
+        Callbacks run outside the cache lock. Registration takes the
+        cache lock: with a shared cache, one scenario may subscribe while
+        another is serving (and notifying)."""
+        with self._lock:
+            self._listeners.append(on_remove)
 
     def _notify(self, removed: Sequence[Hashable]) -> None:
+        if not removed:
+            return
+        # snapshot under the lock (subscribe appends under it too), then
+        # fire outside it — callbacks must be free to touch other locks
+        with self._lock:
+            listeners = tuple(self._listeners)
         for uid in removed:
-            for cb in self._listeners:
+            for cb in listeners:
                 cb(uid)
 
     def get(self, key: Key) -> Mapping[str, Any] | None:

@@ -380,6 +380,13 @@ class ServingEngine:
             # frees the user's slot for the next resident user
             self.cache.subscribe(self._device_store.drop)
         self._donate_stage2 = self.device_resident
+        if self._donate_stage2:
+            # plan construction already resolves device_resident+hedging
+            # to hedging=False; enforce it here too (mirroring the
+            # multi-process override) so a plan that slipped past
+            # resolution can never hand HedgedRunner donated uidx/cand
+            # buffers — a hedged duplicate would replay consumed arrays
+            hedging = False
 
         self._stage2 = self._build_rowwise(batched_graph, exec_mode,
                                            use_pallas)
@@ -409,6 +416,11 @@ class ServingEngine:
         # Transfers copy, so one buffer set per bucket serves every pack.
         self._staging: dict[int, tuple[np.ndarray, dict[str, np.ndarray]]] \
             = {}
+        # first-seen candidate-feed signature {name: (dtype, row shape)} —
+        # staging buffers are shaped from it once per bucket, so a later
+        # request drifting from it must fail fast (see _chunk), not be
+        # silently cast (or raise mid-call) by the buffer fill
+        self._feed_sig: dict[str, tuple] | None = None
         self.profiler = StageProfiler()
         self.hedge_policy = hedge_policy or HedgePolicy()
         self.hedging = hedging
@@ -486,8 +498,28 @@ class ServingEngine:
         ``max_batch`` rows. Chunks are host numpy views — packing copies
         them straight into the per-bucket staging buffers, so no per-chunk
         device arrays are ever created. Padding happens per *pack*
-        (possibly shared with other users' chunks), not per chunk."""
+        (possibly shared with other users' chunks), not per chunk.
+
+        The candidate-feed signature (names, row shapes, dtypes) is
+        pinned by the first request the engine sees: the per-bucket
+        staging buffers are allocated from it, and a numpy slice
+        assignment would silently cast a drifting dtype (or raise on a
+        trailing-shape mismatch only after earlier packs launched) — so
+        drift is rejected here, before any pack of the call launches."""
         arrs = {k: np.asarray(v) for k, v in feeds.items()}
+        sig = {k: (v.dtype, tuple(v.shape[1:])) for k, v in arrs.items()}
+        if self._feed_sig is None:
+            self._feed_sig = sig
+        elif sig != self._feed_sig:
+            drift = sorted(k for k in sig.keys() | self._feed_sig.keys()
+                           if sig.get(k) != self._feed_sig.get(k))
+            raise ValueError(
+                f"candidate feed signature drifted from the engine's "
+                f"first request on {drift}: expected "
+                f"{ {k: self._feed_sig.get(k) for k in drift} }, got "
+                f"{ {k: sig.get(k) for k in drift} } — per-engine "
+                f"candidate feeds must keep stable names, row shapes "
+                f"and dtypes (staging buffers are reused across calls)")
         n = next(iter(arrs.values())).shape[0]
         out = []
         for lo in range(0, n, self.max_batch):
@@ -666,22 +698,43 @@ class ServingEngine:
         the device tier is off or that pack overflowed capacity — the pack
         then falls back to the re-stacking path, bit-identically.
 
-        Every user of the CALL is protected while resolving: a later
-        pack's write may never steal a slot an earlier (already prepared)
-        pack still references."""
+        A user appearing under TWO feature versions in one call also
+        forces every pack carrying that user onto the fallback: the
+        device store keeps one slot per user, so resolving the second
+        version would rewrite the slot the first version's rows read —
+        within a pack (both keys collapsing to one slot) and across packs
+        (a later barrier write clobbering a row an earlier pack
+        references). Re-stacking keeps per-version tables, preserving
+        the bit-identity contract through version bumps.
+
+        Every device-resolved user of the CALL is protected while
+        resolving: a later pack's write may never steal a slot an
+        earlier (already prepared) pack still references."""
         if self._device_store is None:
             return [None] * len(packs)
+        ver_of: dict = {}
+        conflicted = set()
+        for _, _, slot_keys in packs:
+            # with the device tier live, cache_user_reps is on, so every
+            # slot key is a (user_id, feature_version) cache key
+            for uid, ver in slot_keys:
+                if ver_of.setdefault(uid, ver) != ver:
+                    conflicted.add(uid)
         per_pack = []
         protect: list = []
         for _, slot_reps, slot_keys in packs:
-            # with the device tier live, cache_user_reps is on, so every
-            # slot key is a (user_id, feature_version) cache key
+            if any(uid in conflicted for uid, _ in slot_keys):
+                per_pack.append(None)
+                continue
             triples = [(self._scoped_uid(uid), ver, reps)
                        for (uid, ver), reps in zip(slot_keys, slot_reps)]
             per_pack.append(triples)
             protect.extend(u for u, _, _ in triples)
         out = []
         for triples in per_pack:
+            if triples is None:
+                out.append(None)
+                continue
             slots = self._device_store.ensure_rows(triples, protect=protect)
             out.append(slots if all(s is not None for s in slots) else None)
         return out

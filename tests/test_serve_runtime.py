@@ -796,6 +796,56 @@ class TestDeviceResidentTier:
             np.testing.assert_array_equal(out_neg[o], out_zero[o])
         dev.close()
 
+    def test_mixed_version_same_user_falls_back(self, paper):
+        """One coalesced call carrying the SAME user under two feature
+        versions: the device store keeps one slot per user, so resolving
+        the second version would rewrite the slot the first version's
+        rows read. Every pack touching that user must fall back to
+        re-stacking — both versions packed together and split across
+        packs — and stay bit-identical to the re-stacking engine."""
+        graph, params, user_in = paper
+        mk = lambda: [  # (user 1, v0), (user 1, v1), (user 2, v0)
+            _request(graph, user_in, 1, 12, seed=11, version=0),
+            _request(graph, user_in, 1, 12, seed=12, version=1),
+            _request(graph, user_in, 2, 12, seed=13)]
+        ref = ServingEngine(graph, params, plan=self._plan("paper"))
+        # single pack: both versions' slot keys land in one ensure_rows
+        one = ServingEngine(graph, params, plan=self._plan(
+            "paper", cache__device_resident=True))
+        _assert_bit_identical(ref.score_coalesced(mk()),
+                              one.score_coalesced(mk()))
+        # split packs: a later pack's barrier write must not clobber a
+        # slot an earlier pack references
+        split = ServingEngine(graph, params, plan=self._plan(
+            "paper", cache__device_resident=True,
+            batch__max_users_per_batch=1))
+        _assert_bit_identical(ref.score_coalesced(mk()),
+                              split.score_coalesced(mk()))
+        # a version-clean follow-up call goes device-resident again
+        follow = _request(graph, user_in, 3, 12, seed=14)
+        _assert_bit_identical([ref.score(follow)], [one.score(follow)])
+        assert one.device_store.writes >= 1
+        ref.close()
+        one.close()
+        split.close()
+
+    def test_feed_signature_drift_fails_fast(self, paper):
+        """Staging buffers are shaped from the first request; a later
+        request with a drifting candidate dtype must raise before any
+        launch instead of being silently cast by the buffer fill."""
+        graph, params, user_in = paper
+        dev = ServingEngine(graph, params, plan=self._plan(
+            "paper", cache__device_resident=True))
+        dev.score(_request(graph, user_in, 1, 8, seed=1))
+        drifted = _request(graph, user_in, 2, 8, seed=2)
+        k = next(iter(drifted.candidate_feeds))
+        drifted.candidate_feeds = {
+            **drifted.candidate_feeds,
+            k: np.asarray(drifted.candidate_feeds[k], np.float64)}
+        with pytest.raises(ValueError, match="signature drifted"):
+            dev.score(drifted)
+        dev.close()
+
     def test_restack_fallback_on_slot_overflow(self, paper):
         """More users in one coalesced call than device slots: the
         overflowing pack falls back to re-stacking, bit-identically."""
