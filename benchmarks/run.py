@@ -381,21 +381,37 @@ def bench_dist(shards=(1, 2, 4), pool: int = 2000, users: int = 4,
         return [json.loads(line) for line in p.stdout.strip().splitlines()
                 if line.startswith("{") and "qps" in line]
 
+    def breakdown_row(prefix: str, r: dict) -> None:
+        # sibling row to serve/<mode>/breakdown: per-phase mean µs per
+        # engine call over the worker's timed passes, so per-shard qps
+        # stays attributable to pack/dispatch/device/unpack
+        bd = r.get("breakdown")
+        if not bd:
+            return
+        phase_us = {p: bd[p]["mean_us"]
+                    for p in ("pack", "dispatch", "device", "unpack")}
+        _row(f"{prefix}/breakdown", sum(phase_us.values()),
+             ";".join(f"{p}={u:.1f}us" for p, u in phase_us.items())
+             + f";stage1={bd['stage1']['mean_us']:.1f}us")
+
     records = []
     for n in shards:
         for r in run(1, n):
             records.append(r)
-            _row(f"dist/{r['mode']}/shards={r['shards']}", 1e6 / r["qps"],
+            name = f"dist/{r['mode']}/shards={r['shards']}"
+            _row(name, 1e6 / r["qps"],
                  f"procs=1;pool={r['pool']};users={r['users']};"
                  f"qps={r['qps']};bit_identical={r.get('bit_identical')}")
+            breakdown_row(name, r)
     if two_process:
         nproc_dev = max(max(shards) // 2, 1)
         for r in run(2, nproc_dev):
             records.append(r)
-            _row(f"dist/{r['mode']}/shards={r['shards']}/procs=2",
-                 1e6 / r["qps"],
+            name = f"dist/{r['mode']}/shards={r['shards']}/procs=2"
+            _row(name, 1e6 / r["qps"],
                  f"procs=2;pool={r['pool']};users={r['users']};"
                  f"qps={r['qps']};bit_identical={r.get('bit_identical')}")
+            breakdown_row(name, r)
     _JSON_EXTRA["dist"] = {"config": "paper_ranking", "scale": scale,
                            "pool": pool, "users": users, "passes": passes,
                            "records": records}

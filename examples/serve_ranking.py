@@ -14,6 +14,13 @@ into shared stage-2 buckets — each executed as ONE row-wise call (every
 candidate row gathers its own user's cached reps). Scores are bit-identical
 to the sequential per-request loop; throughput is reported for both.
 
+Part 3 — overload & SLO admission: the same graph behind a
+``RankingService`` with the continuous dispatch loop and deliberately tiny
+admission thresholds, hit with a burst far past what the queue will hold.
+best_effort requests are shed (typed ``AdmissionError``, failing fast at
+submit) or degraded (candidate pool truncated) while every deadline-tagged
+request completes at full pool size — the SLO tiering in one printout.
+
   PYTHONPATH=src python examples/serve_ranking.py [--candidates 4096]
 """
 import argparse
@@ -25,8 +32,8 @@ import numpy as np
 from repro.data.features import make_recsys_feeds
 from repro.graph.executor import init_graph_params
 from repro.models.ranking import PaperRankingConfig, build_paper_ranking_model
-from repro.serve import (CoalescingBatcher, ServePlan, ServeRequest,
-                         ServingEngine)
+from repro.serve import (AdmissionError, CoalescingBatcher, RankingService,
+                         SLO_DEADLINE, ServePlan, ServeRequest, ServingEngine)
 
 
 def main():
@@ -159,6 +166,55 @@ def main():
           f"cross_user_calls={cross}  batches={batches}")
     print("coalesced scores bit-identical to per-request ✓")
     eng.close()
+
+    # ---- part 3: overload burst against SLO-tiered admission control -------
+    print("\n-- overload & admission (mari): burst past the queue, tiny "
+          "shed/degrade depths --")
+    # thresholds are deliberately small so a laptop-sized burst trips every
+    # tier: shed best_effort beyond 8 queued, halve its candidate pool
+    # beyond 4 queued; deadline-tagged requests are exempt from both
+    over_plan = base_plan.evolve(
+        graph__mode="mari", batch__hedging=False, batch__continuous=True,
+        batch__admission=True, batch__shed_queue_depth=8,
+        batch__degrade_queue_depth=4, batch__degrade_frac=0.5,
+        batch__linger_ms=args.linger_ms)
+    svc = RankingService(over_plan)
+    svc.register("ranking", graph=graph, params=params, plan=over_plan)
+    for r in burst[:4]:                       # warm shapes + rep caches
+        svc.score("ranking", r)
+
+    futs = []
+    for i, r in enumerate(burst * 3):         # ~3x the part-2 burst at once
+        deadline = i % 5 == 0                 # every 5th request is urgent
+        futs.append((deadline, svc.submit(
+            "ranking", r, slo=SLO_DEADLINE if deadline else "best_effort",
+            deadline_ms=250.0 if deadline else None)))
+    # a shed future is already failed (fast, typed) when submit returns —
+    # it never hangs; admitted futures resolve to ServeResults
+    done, shed = [], 0
+    for d, f in futs:
+        err = f.exception()
+        if err is not None:
+            assert isinstance(err, AdmissionError), err
+            assert not d, "deadline work must never be shed by depth"
+            assert err.queue_depth >= 8, err
+            shed += 1
+        else:
+            done.append((d, f.result()))
+    assert all(not res.degraded for d, res in done if d), \
+        "deadline work must never be degraded"
+    degraded = sum(res.degraded for _, res in done)
+
+    sc = svc.stats()["scenarios"]["ranking"]
+    print(f"[burst     ] submitted={len(burst) * 3}  "
+          f"completed={len(done)}  shed_at_submit={shed}  "
+          f"degraded={degraded}")
+    print(f"[counters  ] shed_best_effort={sc['shed_best_effort']}  "
+          f"shed_deadline={sc['shed_deadline']}  "
+          f"degraded_requests={sc['degraded_requests']}  "
+          f"pipeline_forks={sc['pipeline_forks']}")
+    print("deadline tier untouched under overload ✓")
+    svc.close()
 
 
 if __name__ == "__main__":

@@ -182,6 +182,7 @@ def run_worker(args) -> int:
                 return 1
         if args.bench:
             eng.score_coalesced(reqs)           # warm every shape
+            eng.profiler.reset()                # breakdown = timed loop only
             walls = []
             for _ in range(args.passes):
                 t0 = time.perf_counter()
@@ -190,6 +191,10 @@ def run_worker(args) -> int:
             wall = float(np.median(walls))
             rec["qps"] = round(len(reqs) / wall, 2)
             rec["rows_per_s"] = round(rec["pool"] / wall, 1)
+            # per-phase mean µs per engine call over the timed passes —
+            # the same taxonomy as the serve bench's breakdown rows, so
+            # the dispatch path stays attributable per shard count
+            rec["breakdown"] = eng.profiler.snapshot()
         records.append(rec)
         eng.close()
         if ref is not None:

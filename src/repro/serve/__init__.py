@@ -16,7 +16,11 @@ grown into an async, multi-user subsystem:
 * ``batcher`` — ``CoalescingBatcher``: async request queue that packs
   candidate chunks from different users into shared power-of-two stage-2
   buckets (cross-user batching), with SLO classes — deadline-tagged
-  requests jump the FIFO and shrink the linger window.
+  requests jump the FIFO and shrink the linger window. Dispatch is a
+  continuous loop: group k+1 is formed and launched (two-phase engine
+  API) while group k executes on device, and SLO-tiered admission
+  control sheds (typed ``AdmissionError``) or degrades best_effort work
+  before deadline work under overload.
 * ``cache``   — ``UserRepCache``: bounded LRU user-representation store
   with eviction accounting, removal listeners, byte accounting and
   per-user invalidation; ``DeviceRepStore``: the slot-allocated
@@ -25,9 +29,9 @@ grown into an async, multi-user subsystem:
   the coalesced hot path feeds persistent tables + per-row slot indices
   instead of re-stacking reps every call (``CachePlan.device_resident``).
 * ``profile`` — ``StageProfiler``: per-phase wall-clock taxonomy of the
-  hot path (stage1/pack/dispatch/device/unpack), threaded through the
-  engine and surfaced by ``RankingService.stats()`` and the serve bench's
-  breakdown rows.
+  hot path (stage1/pack/dispatch/device/unpack, plus the loop-level
+  queue_idle/overlap phases), threaded through the engine and surfaced
+  by ``RankingService.stats()`` and the serve bench's breakdown rows.
 * ``hedging`` — ``HedgePolicy`` (rolling-p99 decision) + ``HedgedRunner``
   (real duplicate execution of straggling chunks, first result wins).
 * ``plan``    — ``ServePlan``: the frozen, validated, JSON-serializable
@@ -41,6 +45,8 @@ grown into an async, multi-user subsystem:
 from repro.serve.batcher import (  # noqa: F401
     SLO_BEST_EFFORT,
     SLO_DEADLINE,
+    AdmissionError,
+    BatcherClosedError,
     CoalescingBatcher,
 )
 from repro.serve.cache import DeviceRepStore, UserRepCache  # noqa: F401

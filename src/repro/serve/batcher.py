@@ -27,6 +27,23 @@ co-arriving requests before handing the group to the engine. Coalesced
 scores are bit-identical to per-request ``engine.score`` — both run the
 same row-wise executable family.
 
+**Continuous dispatch** (``continuous=True``, the default) — instead of
+blocking on each group's results before touching the queue again
+(lockstep), the worker launches a group via the engine's two-phase API
+(``begin_coalesced``) and immediately returns to the queue: group k+1 is
+formed, packed into its own transfer buffers, and launched while
+group k still executes on device, up to ``max_inflight`` outstanding
+groups; finished groups are harvested the moment their device results
+are ready (non-blocking ``engine.poll``), so overlap never inflates a
+completed request's latency. Stage 2 runs back-to-back with zero idle
+whenever work is queued.
+Groups are launched AND collected in formation order, so results, counters
+and dispatch order are identical to lockstep — the loop changes *when*
+packs launch, never *what* they compute (a group needing a device-table
+write while older groups are in flight triggers the engine's
+copy-on-write generation fork, never a pipeline stall). An engine
+without ``begin_coalesced`` falls back to lockstep transparently.
+
 **SLO classes** — ``submit(req, slo="deadline", deadline_ms=...)`` marks a
 request latency-critical: deadline requests jump the FIFO (the queue is
 priority-ordered, FIFO within each class) and shrink the linger window —
@@ -35,20 +52,45 @@ a group opened by (or joined by) a deadline request lingers only
 remaining deadline budget, so a latency-critical arrival never waits out a
 full best-effort linger behind older bulk traffic.
 
-The priority is strict: a workload whose deadline-class arrival rate alone
-saturates the worker starves queued best-effort requests for as long as
-the saturation lasts. That is the intended contract — the deadline class
-is for a small latency-critical fraction of traffic, and protecting the
-queue from a caller who tags everything "deadline" is admission control's
-job (upstream of this batcher), not the dispatcher's. ``deadline_requests
-/ requests`` is the counter to alarm on.
+**Admission control** (``admission=True``) — the overload valve upstream
+of the priority queue. At submit time, under the queue lock:
+
+* a ``best_effort`` request arriving at queue depth >=
+  ``shed_queue_depth`` is SHED: its future fails immediately with a typed
+  ``AdmissionError`` (fail fast — never queued, never hung);
+* a ``best_effort`` request arriving at queue depth >=
+  ``degrade_queue_depth`` is DEGRADED: its candidate pool is truncated to
+  the first ``ceil(n * degrade_frac)`` rows (results carry
+  ``degraded=True``) — less device work per admitted request, so the
+  queue drains faster without dropping users entirely;
+* a ``deadline`` request is NEVER shed by queue depth — only when its own
+  ``deadline_ms`` budget is already below ``deadline_headroom_ms`` (an
+  infeasible deadline: shedding immediately beats returning a late
+  answer).
+
+So under overload, best-effort work is degraded first and shed second,
+while the deadline class keeps its strict queue priority — the counters
+``shed_requests`` / ``shed_best_effort`` / ``shed_deadline`` /
+``degraded_requests`` (surfaced by ``RankingService.stats()``) are the
+overload alarm. Without admission control the priority is strict and
+unbounded: a workload whose deadline-class arrival rate alone saturates
+the worker starves queued best-effort requests for as long as the
+saturation lasts — that is the intended contract (``deadline_requests /
+requests`` is the counter to alarm on).
+
+``close()`` drains: every admitted request still queued is scored (with
+zero linger) and every in-flight group collected before the worker exits,
+so no accepted future is ever abandoned. Anything left after a worker
+death or join timeout is failed with ``BatcherClosedError``.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
 import queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
 from typing import Sequence
 
@@ -57,6 +99,21 @@ from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
 SLO_BEST_EFFORT = "best_effort"
 SLO_DEADLINE = "deadline"
 _PRIO = {SLO_DEADLINE: 0, SLO_BEST_EFFORT: 1}
+
+
+class AdmissionError(RuntimeError):
+    """A request shed by admission control — failed fast at submit, never
+    queued. ``slo`` and ``queue_depth`` carry the shed context."""
+
+    def __init__(self, msg: str, *, slo: str | None = None,
+                 queue_depth: int | None = None):
+        super().__init__(msg)
+        self.slo = slo
+        self.queue_depth = queue_depth
+
+
+class BatcherClosedError(RuntimeError):
+    """The batcher shut down before this request could be scored."""
 
 
 @dataclasses.dataclass(order=True)
@@ -69,12 +126,19 @@ class _Item:
     deadline_at: float | None = dataclasses.field(compare=False, default=None)
     submitted_at: float | None = dataclasses.field(compare=False,
                                                    default=None)
+    degraded: bool = dataclasses.field(compare=False, default=False)
 
 
 class CoalescingBatcher:
     def __init__(self, engine: ServingEngine, *, linger_ms: float = 2.0,
                  max_coalesce: int = 64, auto_start: bool = True,
-                 deadline_linger_frac: float = 0.25):
+                 deadline_linger_frac: float = 0.25,
+                 continuous: bool = True, max_inflight: int = 2,
+                 admission: bool = False,
+                 shed_queue_depth: int | None = None,
+                 degrade_queue_depth: int | None = None,
+                 degrade_frac: float = 0.5,
+                 deadline_headroom_ms: float = 0.0):
         if getattr(engine, "_multiproc", False):
             # same hazard class as hedging under SPMD: each process's
             # batcher thread would form groups from its own wall-clock
@@ -86,25 +150,56 @@ class CoalescingBatcher:
                 "CoalescingBatcher cannot wrap a multi-process sharded "
                 "engine: group formation is timing-dependent and would "
                 "desynchronize the SPMD collective schedule")
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.engine = engine
         self.linger_ms = linger_ms
         self.max_coalesce = max_coalesce
         self.deadline_linger_frac = deadline_linger_frac
+        self.continuous = continuous
+        self.max_inflight = max_inflight
+        self.admission = admission
+        self.shed_queue_depth = shed_queue_depth
+        self.degrade_queue_depth = degrade_queue_depth
+        self.degrade_frac = degrade_frac
+        self.deadline_headroom_ms = deadline_headroom_ms
         self._q: queue.PriorityQueue = queue.PriorityQueue()
         self._seq = 0
         self._stop = threading.Event()
         self._lock = threading.Lock()     # serializes submit vs close
         self._worker: threading.Thread | None = None
+        self._queued = 0              # admitted, not yet claimed by the worker
         self.batches = 0              # engine handoffs
         self.coalesced_requests = 0   # requests scored in a >1-request group
         self.requests = 0
         self.deadline_requests = 0    # submitted with the deadline SLO
+        self.shed_requests = 0        # failed fast by admission control
+        self.shed_best_effort = 0     # ... of the best_effort class
+        self.shed_deadline = 0        # ... of the deadline class (infeasible)
+        self.degraded_requests = 0    # admitted with a truncated pool
         # cumulative submit->handoff wait: the queueing share of end-to-end
         # latency that the engine's StageProfiler cannot see (it starts
-        # timing only once the group reaches score_coalesced)
+        # timing only once the group reaches the engine)
         self.queue_wait_ms = 0.0
         if auto_start:
             self.start()
+
+    @classmethod
+    def from_plan(cls, engine: ServingEngine, batch,
+                  *, auto_start: bool = True) -> "CoalescingBatcher":
+        """Build a batcher from a ``BatchPlan`` (the ``ServePlan`` spine's
+        batch section) — the one wiring every entry point shares."""
+        return cls(engine, linger_ms=batch.linger_ms,
+                   max_coalesce=batch.max_coalesce,
+                   deadline_linger_frac=batch.deadline_linger_frac,
+                   continuous=batch.continuous,
+                   max_inflight=batch.max_inflight,
+                   admission=batch.admission,
+                   shed_queue_depth=batch.shed_queue_depth,
+                   degrade_queue_depth=batch.degrade_queue_depth,
+                   degrade_frac=batch.degrade_frac,
+                   deadline_headroom_ms=batch.deadline_headroom_ms,
+                   auto_start=auto_start)
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -115,16 +210,20 @@ class CoalescingBatcher:
             target=self._run, name="coalescing-batcher", daemon=True)
         self._worker.start()
 
-    def close(self) -> None:
-        """Stop the worker after the queue drains; fail anything stranded."""
+    def close(self, timeout: float = 60.0) -> None:
+        """Stop the worker AFTER the queue drains: every admitted request
+        is still scored (with zero linger) and every in-flight group
+        collected. Only requests stranded by a dead or hung worker are
+        failed — with ``BatcherClosedError``, so no waiter blocks
+        forever."""
         with self._lock:              # no submit can interleave past here
             self._stop.set()
             self._q.put(_Item(prio=2, seq=self._next_seq()))  # wake worker
         if self._worker is not None:
-            self._worker.join(timeout=30)
+            self._worker.join(timeout=timeout)
             self._worker = None
-        # a request that raced the shutdown may still sit in the dead queue;
-        # its waiter must not block forever
+        # backstop only: with a live worker the drain loop above has
+        # emptied the queue before exiting
         while True:
             try:
                 item = self._q.get_nowait()
@@ -132,7 +231,9 @@ class CoalescingBatcher:
                 break
             if (item.fut is not None
                     and item.fut.set_running_or_notify_cancel()):
-                item.fut.set_exception(RuntimeError("batcher closed"))
+                item.fut.set_exception(
+                    BatcherClosedError("batcher closed before this request "
+                                       "was scored"))
 
     def __enter__(self) -> "CoalescingBatcher":
         return self
@@ -145,6 +246,29 @@ class CoalescingBatcher:
         self._seq += 1
         return self._seq
 
+    def _shed(self, fut: Future, slo: str, reason: str) -> Future:
+        self.shed_requests += 1
+        if slo == SLO_DEADLINE:
+            self.shed_deadline += 1
+        else:
+            self.shed_best_effort += 1
+        # claim-then-fail: the waiter sees the typed error immediately —
+        # a shed future must never hang
+        fut.set_running_or_notify_cancel()
+        fut.set_exception(AdmissionError(
+            f"request shed by admission control: {reason}",
+            slo=slo, queue_depth=self._queued))
+        return fut
+
+    def _degrade(self, req: ServeRequest) -> ServeRequest | None:
+        n = self._candidate_rows(req)
+        keep = max(1, math.ceil(n * self.degrade_frac))
+        if keep >= n:
+            return None
+        return dataclasses.replace(
+            req, candidate_feeds={k: v[:keep]
+                                  for k, v in req.candidate_feeds.items()})
+
     def submit(self, req: ServeRequest, *, slo: str = SLO_BEST_EFFORT,
                deadline_ms: float | None = None) -> "Future[ServeResult]":
         """Enqueue a request; resolves once its group has been scored.
@@ -153,6 +277,11 @@ class CoalescingBatcher:
         queued best-effort requests and shrinks its group's linger.
         ``deadline_ms`` (optional, implies the deadline class) additionally
         caps the linger by the remaining budget.
+
+        With ``admission=True`` an overloaded queue sheds (typed
+        ``AdmissionError``, failed fast) or degrades (truncated candidate
+        pool) best-effort work per the class docstring; the returned
+        future always resolves either way.
         """
         if deadline_ms is not None:
             slo = SLO_DEADLINE
@@ -166,12 +295,40 @@ class CoalescingBatcher:
             self.requests += 1
             if slo == SLO_DEADLINE:
                 self.deadline_requests += 1
+            degraded = False
+            if self.admission:
+                if slo == SLO_DEADLINE:
+                    # deadline work is never shed by depth — only when its
+                    # own budget is already infeasible (a late answer is
+                    # worth less than an immediate, typed refusal)
+                    if (deadline_ms is not None
+                            and deadline_ms < self.deadline_headroom_ms):
+                        return self._shed(
+                            fut, slo,
+                            f"deadline budget {deadline_ms:g}ms is below "
+                            f"the {self.deadline_headroom_ms:g}ms headroom "
+                            f"floor")
+                else:
+                    if (self.shed_queue_depth is not None
+                            and self._queued >= self.shed_queue_depth):
+                        return self._shed(
+                            fut, slo,
+                            f"queue depth {self._queued} >= shed threshold "
+                            f"{self.shed_queue_depth} (best_effort)")
+                    if (self.degrade_queue_depth is not None
+                            and self._queued >= self.degrade_queue_depth):
+                        slim = self._degrade(req)
+                        if slim is not None:
+                            req = slim
+                            degraded = True
+                            self.degraded_requests += 1
             now = time.perf_counter()
             deadline_at = (now + deadline_ms / 1e3
                            if deadline_ms is not None else None)
+            self._queued += 1
             self._q.put(_Item(prio=_PRIO[slo], seq=self._next_seq(),
                               req=req, fut=fut, deadline_at=deadline_at,
-                              submitted_at=now))
+                              submitted_at=now, degraded=degraded))
         return fut
 
     def score_many(self, reqs: Sequence[ServeRequest],
@@ -196,42 +353,97 @@ class CoalescingBatcher:
         return now + self.linger_ms / 1e3
 
     def _run(self) -> None:
+        """The dispatch loop.
+
+        Continuous mode keeps up to ``max_inflight`` launched groups
+        outstanding: with work queued, the next group is formed and
+        launched (host-side packing into per-pack transfer buffers)
+        while the previous group still executes on device — stage 2 never
+        waits on the host. Groups are collected oldest-first: eagerly as
+        soon as their results are ready (``_harvest``), or blocking when
+        the queue momentarily empties / the in-flight budget is reached. Lockstep
+        mode (``continuous=False``, or an engine without the two-phase
+        API) scores each group to completion before the next.
+
+        On ``close()`` the loop drains: remaining queued requests are
+        scored with zero linger and all in-flight groups collected before
+        the thread exits — an admitted future is never abandoned.
+        """
+        inflight: deque = deque()     # (claimed items, engine handle), FIFO
+        continuous = (self.continuous
+                      and hasattr(self.engine, "begin_coalesced"))
+        prof = getattr(self.engine, "profiler", None)
         while True:
+            t_idle = None
             try:
-                item = self._q.get(timeout=0.05)
+                if inflight:
+                    try:
+                        item = self._q.get_nowait()
+                    except queue.Empty:
+                        # queue momentarily dry: harvest the oldest group
+                        # (device time, not idle time)
+                        self._collect_one(inflight)
+                        continue
+                else:
+                    t_idle = time.perf_counter()
+                    item = self._q.get(timeout=0.05)
             except queue.Empty:
+                if prof is not None:
+                    prof.add("queue_idle", time.perf_counter() - t_idle)
                 if self._stop.is_set():
                     return
                 continue
-            if item.req is None:
-                if self._stop.is_set() and self._q.empty():
-                    return
+            if t_idle is not None and prof is not None:
+                # partial wait before this arrival: nothing was in flight,
+                # so the device sat idle for it
+                idle = time.perf_counter() - t_idle
+                if idle > 1e-4:
+                    prof.add("queue_idle", idle)
+            if item.req is None:      # wake marker (close() or stale)
                 continue
-            group = [item]
-            rows = self._candidate_rows(item.req)
-            deadline = self._linger_until(item, time.perf_counter())
-            while (len(group) < self.max_coalesce
-                   and rows < self.engine.max_batch):
-                timeout = deadline - time.perf_counter()
-                if timeout <= 0:
-                    break
-                try:
-                    nxt = self._q.get(timeout=timeout)
-                except queue.Empty:
-                    break
-                if nxt.req is None:
-                    continue
-                group.append(nxt)
-                rows += self._candidate_rows(nxt.req)
-                # a deadline request joining an open group truncates the
-                # remaining linger to its own (shrunken) window
-                deadline = min(deadline,
-                               self._linger_until(nxt, time.perf_counter()))
-            self._score_group(group)
-            if self._stop.is_set() and self._q.empty():
-                return
+            group = self._form_group(item, inflight)
+            self._launch_group(group, inflight, continuous, prof)
+            while len(inflight) >= self.max_inflight:
+                self._collect_one(inflight)
+            self._harvest(inflight)
 
-    def _score_group(self, group: list[_Item]) -> None:
+    def _form_group(self, item: _Item, inflight: deque) -> list[_Item]:
+        with self._lock:
+            self._queued -= 1
+        group = [item]
+        rows = self._candidate_rows(item.req)
+        # draining after close(): no linger — ship everything, fast
+        deadline = (time.perf_counter() if self._stop.is_set()
+                    else self._linger_until(item, time.perf_counter()))
+        while (len(group) < self.max_coalesce
+               and rows < self.engine.max_batch):
+            timeout = deadline - time.perf_counter()
+            if timeout <= 0:
+                break
+            if inflight:
+                # linger in short slices so a previous group whose device
+                # results finish MID-linger is harvested immediately — its
+                # waiters must not sit out this group's window
+                self._harvest(inflight)
+                timeout = min(timeout, 5e-4)
+            try:
+                nxt = self._q.get(timeout=timeout)
+            except queue.Empty:
+                continue
+            if nxt.req is None:
+                continue
+            with self._lock:
+                self._queued -= 1
+            group.append(nxt)
+            rows += self._candidate_rows(nxt.req)
+            # a deadline request joining an open group truncates the
+            # remaining linger to its own (shrunken) window
+            deadline = min(deadline,
+                           self._linger_until(nxt, time.perf_counter()))
+        return group
+
+    def _launch_group(self, group: list[_Item], inflight: deque,
+                      continuous: bool, prof) -> None:
         # claim each future before doing work: a waiter that cancelled while
         # its request sat queued is dropped here, and a claimed (RUNNING)
         # future can no longer be cancelled — so set_result below cannot
@@ -240,20 +452,61 @@ class CoalescingBatcher:
         self.queue_wait_ms += sum(
             (now - it.submitted_at) * 1e3 for it in group
             if it.submitted_at is not None)
-        group = [(it.req, it.fut) for it in group
-                 if it.fut.set_running_or_notify_cancel()]
-        if not group:
+        claimed = [it for it in group
+                   if it.fut.set_running_or_notify_cancel()]
+        if not claimed:
             return
-        reqs = [req for req, _ in group]
+        reqs = [it.req for it in claimed]
+        if not continuous:
+            try:
+                results = self.engine.score_coalesced(reqs)
+            except BaseException as e:      # propagate to every waiter
+                self._fail(claimed, e)
+                return
+            self._resolve(claimed, results)
+            return
+        overlapped = bool(inflight)
+        t0 = time.perf_counter()
         try:
-            results = self.engine.score_coalesced(reqs)
-        except BaseException as e:          # propagate to every waiter
-            for _, fut in group:
-                if not fut.done():
-                    fut.set_exception(e)
+            handle = self.engine.begin_coalesced(reqs)
+        except BaseException as e:
+            self._fail(claimed, e)
             return
+        if overlapped and prof is not None:
+            # host work done UNDER a still-executing previous group — the
+            # time the continuous loop hides beneath device compute
+            prof.add("overlap", time.perf_counter() - t0)
+        inflight.append((claimed, handle))
+
+    def _harvest(self, inflight: deque) -> None:
+        """Collect (oldest-first) every in-flight group whose device
+        results are already materialized — non-blocking, via the engine's
+        ``poll``. Keeps result latency flat at low load, where groups
+        finish long before the in-flight budget forces a collect."""
+        poll = getattr(self.engine, "poll", None)
+        while inflight and poll is not None and poll(inflight[0][1]):
+            self._collect_one(inflight)
+
+    def _collect_one(self, inflight: deque) -> None:
+        claimed, handle = inflight.popleft()
+        try:
+            results = self.engine.collect(handle)
+        except BaseException as e:
+            self._fail(claimed, e)
+            return
+        self._resolve(claimed, results)
+
+    @staticmethod
+    def _fail(claimed: list[_Item], exc: BaseException) -> None:
+        for it in claimed:
+            if not it.fut.done():
+                it.fut.set_exception(exc)
+
+    def _resolve(self, claimed: list[_Item], results) -> None:
         self.batches += 1
-        if len(group) > 1:
-            self.coalesced_requests += len(group)
-        for (_, fut), res in zip(group, results):
-            fut.set_result(res)
+        if len(claimed) > 1:
+            self.coalesced_requests += len(claimed)
+        for it, res in zip(claimed, results):
+            if it.degraded:
+                res.degraded = True
+            it.fut.set_result(res)

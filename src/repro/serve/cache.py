@@ -191,7 +191,10 @@ class DeviceRepStore:
     NOT thread-safe against concurrent *dispatch*: callers must finish all
     ``ensure_rows`` writes for a batch before launching executables that
     read the tables (the donated writer deletes the previous table buffer).
-    ``ServingEngine`` serializes exactly this way.
+    ``ServingEngine`` serializes exactly this way. To write while OLDER
+    launches are still executing, arm ``fork_next_write`` first — the
+    write then copies the table into a fresh generation instead of
+    donating, leaving the in-flight buffer intact.
     """
 
     def __init__(self, capacity: int,
@@ -204,6 +207,8 @@ class DeviceRepStore:
         self._shardings = dict(shardings) if shardings else None
         self._tables: dict[str, Any] | None = None
         self._writer = None
+        self._writer_cow = None
+        self._fork_pending = False
         # user -> (version, slot); insertion order == LRU order
         self._map: OrderedDict[Hashable, tuple[Hashable, int]] = OrderedDict()
         self._free: list[int] = list(range(capacity - 1, -1, -1))
@@ -213,6 +218,8 @@ class DeviceRepStore:
         self.recycles = 0    # LRU slot steals (capacity pressure)
         self.drops = 0       # slots returned via drop()
         self.overflows = 0   # ensure_rows rows that could not get a slot
+        self.forks = 0       # copy-on-write generation forks (writes armed
+        #                      by fork_next_write under in-flight launches)
 
     # -- allocation ---------------------------------------------------------
     def _alloc(self, row: Mapping[str, Any]) -> None:
@@ -244,6 +251,10 @@ class DeviceRepStore:
         # donate_argnums=0: the previous table generation is consumed in
         # place — a row write costs one row's bandwidth, not a table copy
         self._writer = jax.jit(_write, donate_argnums=0, **kwargs)
+        # the same update WITHOUT donation: builds a fresh generation and
+        # leaves the previous buffer alive for in-flight executables still
+        # reading it (see fork_next_write)
+        self._writer_cow = jax.jit(_write, **kwargs)
         self._tables = tables
 
     # -- slot resolution ----------------------------------------------------
@@ -285,8 +296,18 @@ class DeviceRepStore:
                 try:
                     if self._tables is None:
                         self._alloc(reps)
-                    self._tables = self._writer(self._tables, dict(reps),
-                                                np.int32(slot))
+                    if self._fork_pending:
+                        # copy-on-write: in-flight executables keep the
+                        # generation they were handed; writes after this
+                        # one donate the (not-yet-published) fork in place
+                        self._tables = self._writer_cow(
+                            self._tables, dict(reps), np.int32(slot))
+                        self._fork_pending = False
+                        self.forks += 1
+                    else:
+                        self._tables = self._writer(self._tables,
+                                                    dict(reps),
+                                                    np.int32(slot))
                 except Exception:
                     # a failed alloc/write (e.g. a rep row violating the
                     # boundary spec) must not leak the slot it claimed; a
@@ -326,6 +347,36 @@ class DeviceRepStore:
             entry = self._map.get(user)
             return None if entry is None else entry[1]
 
+    def fork_next_write(self) -> None:
+        """Arm copy-on-write for the NEXT row write: instead of donating
+        the current table generation in place, it builds a fresh one and
+        leaves the old buffer intact. The continuous dispatch loop arms
+        this when launches are still in flight — their executables hold
+        (and keep alive) the generation they were handed at launch, while
+        this call and everything after it read the fork. Later writes in
+        the same resolution donate again: they consume the fork, which no
+        in-flight executable has seen. Disarm with ``clear_fork_mark`` if
+        the anticipated write never materializes (e.g. every pack fell
+        back to re-stacking)."""
+        with self._lock:
+            self._fork_pending = True
+
+    def clear_fork_mark(self) -> None:
+        with self._lock:
+            self._fork_pending = False
+
+    def is_live(self, user: Hashable, version: Hashable) -> bool:
+        """True iff ``(user, version)`` already holds a slot, i.e. an
+        ``ensure_rows`` call for it would be a pure hit — no row write, no
+        LRU steal. The continuous dispatch loop uses this to decide whether
+        a call needs the copy-on-write fork before launching over in-flight
+        executables (hits read the current table generation freely; a miss
+        means a row write, and a donated write would delete the generation
+        an in-flight executable is reading)."""
+        with self._lock:
+            entry = self._map.get(user)
+            return entry is not None and entry[0] == version
+
     @property
     def tables(self) -> dict[str, Any] | None:
         """The live per-boundary ``(capacity, ...)`` tables (None until the
@@ -351,6 +402,7 @@ class DeviceRepStore:
                 "recycles": self.recycles,
                 "drops": self.drops,
                 "overflows": self.overflows,
+                "forks": self.forks,
                 "bytes": sum(boundary.values()),
                 "boundary_bytes": boundary,
             }

@@ -61,8 +61,8 @@ stage-2 pipeline:
   per bucket; the engine's ``mode="clip"`` gathers make dead or stale
   slots safe by construction.
 * **donated bucket buffers** — candidate rows and the user index are
-  filled into reusable per-bucket host staging buffers (padding is one
-  masked tail write), transferred, and donated to the stage-2 executable
+  filled into private per-pack host buffers (padding is one masked tail
+  write), transferred, and donated to the stage-2 executable
   (``donate_argnums``), so steady-state serving performs zero fresh
   device allocations. Donated arguments are consumed: callers must never
   retain them, which is why ``device_resident`` forces ``hedging`` off
@@ -79,11 +79,29 @@ stage-2 pipeline:
   rows.
 
 Ordering contract: every device-table row write of a call completes
-before any stage-2 launch of that call, and every result is materialized
-before the call returns — so the donated table writer can never delete a
-buffer an in-flight executable still reads. Concurrent direct callers
-must serialize ``score``/``score_coalesced`` themselves (the batcher's
-single worker thread already does).
+before any stage-2 launch of that call — so the donated table writer can
+never delete a buffer an in-flight executable still reads. Concurrent
+direct callers must serialize ``score``/``score_coalesced`` themselves
+(the batcher's single worker thread already does).
+
+Two-phase dispatch (the continuous batching loop's engine contract):
+``begin_coalesced(reqs)`` runs stage 1 + packing + the table-write
+barrier and launches every pack WITHOUT blocking, returning an opaque
+in-flight handle; ``collect(handle)`` blocks, materializes, and slices
+the per-request results. ``score_coalesced`` is exactly
+``collect(begin_coalesced(reqs))``, so the lockstep and continuous paths
+share one implementation and stay bit-identical by construction. The
+engine tracks outstanding handles: a ``begin_coalesced`` call whose
+users are all already resident overlaps freely (its packs read the
+current table generation, which in-flight executables also hold). A call
+that needs ANY device-table row write arms the store's copy-on-write
+fork (``pipeline_forks`` counts these): the first write builds a NEW
+table generation instead of donating the old one in place, so in-flight
+executables keep reading the buffer they were handed while this call
+reads the fork — overlap survives cold users at the cost of one table
+copy. Either way the pipeline never drains mid-stream; results are
+bit-identical because both generations carry identical rows for every
+user a pack references.
 """
 from __future__ import annotations
 
@@ -124,6 +142,7 @@ class ServeResult:
     hedged: int = 0              # dispatches that launched a duplicate
     stage1_ms: float = 0.0       # 0 when cached / single-stage
     coalesced: bool = False      # scored inside a cross-user batch
+    degraded: bool = False       # candidate pool truncated under overload
 
 
 def _precat_mari_weights(graph: Graph, params: dict) -> dict:
@@ -161,6 +180,18 @@ class _ReqInfo:                   # per-request working state inside a batch
     stage1_ms: float
     chunks: list[tuple[dict, int]]
     slot_key: object
+
+
+@dataclasses.dataclass(eq=False)
+class _InFlight:
+    """Opaque handle for a launched-but-uncollected ``begin_coalesced``
+    call. ``eq=False``: identity semantics — the engine's outstanding list
+    must distinguish two handles even for identical request batches."""
+    reqs: Sequence[ServeRequest]
+    infos: list
+    packs: list
+    launched: list                # per pack: (outs, hedged, blocked)
+    t0: float
 
 
 class ServingEngine:
@@ -347,7 +378,7 @@ class ServingEngine:
         self.gather_attention = gather_attention
 
         # -- rep cache + device tier (before _build_rowwise: stage-2 buffer
-        # donation is only sound on the device-resident staging path) --
+        # donation is only sound on the device-resident path) --
         # single-stage serving has no stage-1 outputs to reuse — the
         # "representation" is the raw feed dict, rebuilt per request — so
         # cache get/put there is pure bookkeeping overhead on the hot path
@@ -411,15 +442,16 @@ class ServingEngine:
         self.stage1_calls = 0                 # trace counter for the split test
         self.stage2_calls = 0                 # total row-wise dispatches
         self.coalesced_calls = 0              # dispatches mixing >1 user slot
+        self.pipeline_forks = 0               # copy-on-write table forks
+        #                                       (begin_coalesced needed a row
+        #                                       write while launches were in
+        #                                       flight)
+        self._inflight: list[_InFlight] = []  # launched, not yet collected
         self._batch_shapes: set[tuple[int, int]] = set()  # (U_dim, bucket)
-        # per-bucket host staging buffers: (uidx, {cand name -> buffer}).
-        # Transfers copy, so one buffer set per bucket serves every pack.
-        self._staging: dict[int, tuple[np.ndarray, dict[str, np.ndarray]]] \
-            = {}
         # first-seen candidate-feed signature {name: (dtype, row shape)} —
-        # staging buffers are shaped from it once per bucket, so a later
-        # request drifting from it must fail fast (see _chunk), not be
-        # silently cast (or raise mid-call) by the buffer fill
+        # pack transfer buffers are shaped from it, so a later request
+        # drifting from it must fail fast (see _chunk), not be silently
+        # cast (or raise mid-call) by the buffer fill
         self._feed_sig: dict[str, tuple] | None = None
         self.profiler = StageProfiler()
         self.hedge_policy = hedge_policy or HedgePolicy()
@@ -476,7 +508,7 @@ class ServingEngine:
                           out_shardings=self._out_shardings)
         if self._donate_stage2:
             # donated bucket buffers: user_index + candidate feeds are
-            # single-use staging transfers under the device-resident path,
+            # single-use transfers under the device-resident path,
             # so XLA may alias their device buffers for outputs/temporaries
             # (zero fresh allocations in steady state). params and the
             # persistent rep tables are never donated — they outlive calls.
@@ -496,13 +528,13 @@ class ServingEngine:
     def _chunk(self, feeds: Mapping[str, jax.Array]) -> list[tuple[dict, int]]:
         """Split a candidate pool into raw (chunk, n_valid) pieces of at most
         ``max_batch`` rows. Chunks are host numpy views — packing copies
-        them straight into the per-bucket staging buffers, so no per-chunk
+        them straight into each pack's transfer buffers, so no per-chunk
         device arrays are ever created. Padding happens per *pack*
         (possibly shared with other users' chunks), not per chunk.
 
         The candidate-feed signature (names, row shapes, dtypes) is
-        pinned by the first request the engine sees: the per-bucket
-        staging buffers are allocated from it, and a numpy slice
+        pinned by the first request the engine sees: the per-pack
+        transfer buffers are shaped from it, and a numpy slice
         assignment would silently cast a drifting dtype (or raise on a
         trailing-shape mismatch only after earlier packs launched) — so
         drift is rejected here, before any pack of the call launches."""
@@ -519,7 +551,8 @@ class ServingEngine:
                 f"{ {k: self._feed_sig.get(k) for k in drift} }, got "
                 f"{ {k: sig.get(k) for k in drift} } — per-engine "
                 f"candidate feeds must keep stable names, row shapes "
-                f"and dtypes (staging buffers are reused across calls)")
+                f"and dtypes (transfer buffers are shaped from the "
+                f"first request's signature)")
         n = next(iter(arrs.values())).shape[0]
         out = []
         for lo in range(0, n, self.max_batch):
@@ -594,7 +627,26 @@ class ServingEngine:
         then packs are prepared-and-launched one by one — launches are
         non-blocking, so the host packs bucket k+1 while the device
         computes bucket k — and a final collect sweep blocks,
-        materializes, and slices per-request views (async unpack)."""
+        materializes, and slices per-request views (async unpack).
+
+        This is exactly ``collect(begin_coalesced(reqs))`` — the lockstep
+        degenerate case of the two-phase API, so lockstep and continuous
+        dispatch share one implementation and stay bit-identical."""
+        return self.collect(self.begin_coalesced(reqs))
+
+    def begin_coalesced(self, reqs: Sequence[ServeRequest]) -> _InFlight:
+        """Phase 1 of the two-phase dispatch: stage 1 + packing + the
+        table-write barrier, then launch every pack WITHOUT blocking.
+
+        Returns an in-flight handle for ``collect``. While a handle is
+        outstanding, further ``begin_coalesced`` calls overlap with it
+        freely: all-resident calls (the Zipf-hot steady state) read the
+        same table generation the in-flight executables hold; a call that
+        needs a device-table row write arms the store's copy-on-write
+        fork (``pipeline_forks``) — the write builds a NEW generation
+        instead of donating the old buffer, which in-flight executables
+        are still reading, so cold users cost one table copy instead of
+        a pipeline drain."""
         t0 = time.perf_counter()
         prof = self.profiler
         infos: list[_ReqInfo] = []
@@ -643,21 +695,99 @@ class ServingEngine:
         if cur:
             packs.append((cur, cur_reps, cur_keys))
 
-        # write barrier: EVERY donated table-row write of the call happens
-        # here, before any launch — a row write deletes the previous table
-        # generation, which must never happen under an in-flight executable
+        # continuous-loop write-under-flight guard: if ANY slot key of this
+        # call is not already resident, the write barrier below will issue
+        # a table-row write — and a DONATED write would delete the
+        # generation every outstanding executable is still reading. Arm the
+        # store's copy-on-write fork instead: the first write builds a new
+        # generation (old buffer stays alive for the in-flight launches),
+        # later writes of this call donate the unpublished fork in place.
+        # All-resident calls (the Zipf-hot steady state) skip even the copy.
+        forked = False
+        if self._device_store is not None and self._inflight:
+            keys = {info.slot_key for info in infos}
+            if any(not self._device_store.is_live(self._scoped_uid(u), v)
+                   for u, v in keys):
+                self.pipeline_forks += 1
+                self._device_store.fork_next_write()
+                forked = True
+
+        # write barrier: EVERY table-row write of the call happens here,
+        # before any launch — in-place donated writes must never run under
+        # an in-flight executable (the fork above covers the case where
+        # launches ARE outstanding)
         with prof.phase("pack"):
             dslots = self._resolve_device_slots(packs)
+        if forked:
+            # the anticipated write may never have happened (e.g. every
+            # pack fell back to re-stacking): a stale mark must not fork
+            # some later, unrelated write
+            self._device_store.clear_fork_mark()
 
         # pipelined prepare+launch: launches are non-blocking (unless
-        # hedging owns the dispatch), so the staging fill + transfer of
-        # pack k+1 overlaps the device compute of pack k. Safe against the
-        # shared staging buffers because transfers copy (_prepare_pack).
+        # hedging owns the dispatch), so the buffer fill + transfer of
+        # pack k+1 overlaps the device compute of pack k. Each pack owns
+        # its transfer buffers (_prepare_pack) — pack k's host->device
+        # copy may still be pending on the device stream here.
         launched = []
-        for (pack_items, slot_reps, _), ds in zip(packs, dslots):
-            with prof.phase("pack"):
-                prep = self._prepare_pack(pack_items, slot_reps, ds)
-            launched.append(self._launch_pack(prep))
+        try:
+            for (pack_items, slot_reps, _), ds in zip(packs, dslots):
+                with prof.phase("pack"):
+                    prep = self._prepare_pack(pack_items, slot_reps, ds)
+                launched.append(self._launch_pack(prep))
+        except BaseException:
+            # never leave untracked launches behind: a later call's table
+            # write could otherwise run under them
+            for out, _, blocked in launched:
+                if not blocked:
+                    jax.block_until_ready(out)
+            raise
+
+        handle = _InFlight(reqs=reqs, infos=infos, packs=packs,
+                           launched=launched, t0=t0)
+        self._inflight.append(handle)
+        return handle
+
+    def _drain_inflight(self) -> None:
+        """Block until every outstanding launch has finished executing.
+        Handles stay collectible — their results are simply already
+        materialized when ``collect`` runs."""
+        for h in self._inflight:
+            for out, _, blocked in h.launched:
+                if not blocked:
+                    jax.block_until_ready(out)
+
+    def poll(self, handle: _InFlight) -> bool:
+        """Non-blocking readiness probe: True when ``collect(handle)``
+        would not wait on the device (every non-blocked launch's outputs
+        are ready). Conservatively False on backends whose arrays expose
+        no readiness — callers fall back to collecting at the blocking
+        points. This is what lets the continuous loop harvest a finished
+        group the moment it completes instead of holding its results
+        through the next group's linger window."""
+        for out, _, blocked in handle.launched:
+            if blocked:
+                continue
+            for leaf in jax.tree_util.tree_leaves(out):
+                ready = getattr(leaf, "is_ready", None)
+                if ready is None or not ready():
+                    return False
+        return True
+
+    def collect(self, handle: _InFlight) -> list[ServeResult]:
+        """Phase 2 of the two-phase dispatch: block on the handle's
+        launches, materialize scores to host, and slice per-request
+        results. Handles may be collected in any order; each exactly
+        once."""
+        prof = self.profiler
+        try:
+            self._inflight.remove(handle)
+        except ValueError:
+            raise RuntimeError(
+                "collect() on a handle that is not in flight (already "
+                "collected, or from another engine)") from None
+        reqs, infos, packs, launched = (handle.reqs, handle.infos,
+                                        handle.packs, handle.launched)
 
         # collect sweep: block on device, materialize, slice per request
         per_req_scores: list[list[np.ndarray]] = [[] for _ in reqs]
@@ -683,7 +813,7 @@ class ServingEngine:
                 per_req_packs[ri] += 1
                 per_req_hedged[ri] += hedged
 
-        wall_ms = (time.perf_counter() - t0) * 1e3
+        wall_ms = (time.perf_counter() - handle.t0) * 1e3
         return [ServeResult(
             scores=np.concatenate(per_req_scores[ri], axis=0),
             latency_ms=wall_ms, n_batches=per_req_packs[ri],
@@ -739,16 +869,6 @@ class ServingEngine:
             out.append(slots if all(s is not None for s in slots) else None)
         return out
 
-    def _staging_buffers(self, bucket: int, sample_chunk: Mapping
-                         ) -> tuple[np.ndarray, dict[str, np.ndarray]]:
-        st = self._staging.get(bucket)
-        if st is None:
-            st = (np.empty((bucket,), np.int32),
-                  {k: np.empty((bucket,) + tuple(v.shape[1:]), v.dtype)
-                   for k, v in sample_chunk.items()})
-            self._staging[bucket] = st
-        return st
-
     def _prepare_pack(self, pack_items: list, slot_reps: list,
                       dslots: list[int] | None):
         """Assemble one stage-2 call's arguments.
@@ -757,9 +877,12 @@ class ServingEngine:
         n_valid); ``slot_reps`` maps slot idx -> that user's rep dict;
         ``dslots`` maps slot idx -> persistent device-table slot (or None
         for the re-stacking path). Candidate rows and the user index are
-        filled into reusable per-bucket staging buffers — padding is one
-        masked tail write — then transferred (transfers copy, so the
-        buffers are immediately reusable)."""
+        filled into a PRIVATE per-pack host buffer — padding is one
+        masked tail write — then transferred. The buffer must be private:
+        the host->device copy executes asynchronously on the device
+        stream, behind every in-flight executable, so a shared buffer
+        refilled by a later pack races the pending copy (see the transfer
+        comment below)."""
         total = sum(n for _, _, _, n in pack_items)
         bucket = self._bucket(total)
         n_slots = len(slot_reps)
@@ -782,8 +905,10 @@ class ServingEngine:
                          for k in slot_reps[0]}
             slot_ids = list(range(n_slots))
 
-        uidx_buf, cand_bufs = self._staging_buffers(bucket,
-                                                    pack_items[0][2])
+        sample_chunk = pack_items[0][2]
+        uidx_buf = np.empty((bucket,), np.int32)
+        cand_bufs = {k: np.empty((bucket,) + tuple(v.shape[1:]), v.dtype)
+                     for k, v in sample_chunk.items()}
         offset = 0
         for _, slot, chunk, n in pack_items:
             uidx_buf[offset:offset + n] = slot_ids[slot]
@@ -801,20 +926,25 @@ class ServingEngine:
             for buf in cand_bufs.values():
                 buf[offset:] = buf[offset - 1]
 
-        # transfers MUST own their memory: jnp.array(copy=True). On the CPU
-        # backend a jnp.asarray/device_put of an aligned numpy buffer is
-        # zero-copy — it would alias the staging buffer, and the next pack's
-        # refill (or XLA itself, under donation) would corrupt an enqueued
-        # argument. One memcpy per bucket is the price of buffer reuse.
+        # the buffers above are PRIVATE to this pack — nothing may mutate
+        # them after this point. jnp.array's owning host->device copy is
+        # enqueued on the device stream and executes asynchronously,
+        # behind every in-flight executable; the runtime keeps the source
+        # buffer alive until then, but it cannot protect it from being
+        # overwritten. A shared per-bucket staging buffer here let the
+        # next same-bucket pack's refill win that race under the
+        # continuous loop, silently swapping candidate rows between
+        # overlapped groups (caught by the bit-identity suite). One
+        # buffer allocation per pack is the price of the async dispatch.
         if self._multiproc:
             # SPMD: every process holds the identical host values; lift
             # them onto the cross-process mesh (replicated tables, sharded
             # candidate rows + index)
             repl, _, shard, _ = self._in_shardings
             table = {k: self._globalize(v, repl) for k, v in table.items()}
-            cand = {k: self._globalize(v.copy(), shard)
+            cand = {k: self._globalize(v, shard)
                     for k, v in cand_bufs.items()}
-            uidx_arr = self._globalize(uidx_buf.copy(), shard)
+            uidx_arr = self._globalize(uidx_buf, shard)
         else:
             cand = {k: jnp.array(v) for k, v in cand_bufs.items()}
             uidx_arr = jnp.array(uidx_buf)
@@ -870,5 +1000,8 @@ class ServingEngine:
         self.cache.invalidate_user(self._scoped_uid(user_id))
 
     def close(self) -> None:
+        # uncollected begin_coalesced launches must not outlive the engine
+        self._drain_inflight()
+        self._inflight.clear()
         if self._hedged is not None:
             self._hedged.close()

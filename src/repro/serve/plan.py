@@ -15,9 +15,12 @@ Sections (each its own frozen dataclass):
   ``group_by_domain``, ``two_stage``;
 * ``KernelPlan`` — Pallas dispatch: ``use_pallas``, ``kernel_gather``,
   ``gather_attention``, ``precat_weights``;
-* ``BatchPlan``  — bucketing/coalescing/SLO/hedging: ``max_batch``,
-  ``min_bucket``, ``max_users_per_batch``, ``hedging``, ``linger_ms``,
-  ``max_coalesce``, ``deadline_linger_frac``;
+* ``BatchPlan``  — bucketing/coalescing/SLO/hedging plus the continuous
+  dispatch loop and admission control: ``max_batch``, ``min_bucket``,
+  ``max_users_per_batch``, ``hedging``, ``linger_ms``, ``max_coalesce``,
+  ``deadline_linger_frac``, ``continuous``, ``max_inflight``,
+  ``admission``, ``shed_queue_depth``, ``degrade_queue_depth``,
+  ``degrade_frac``, ``deadline_headroom_ms``;
 * ``ShardPlan``  — candidate-axis sharding: ``shard_candidates``
   (False / True / shard count), ``compress_scores``;
 * ``CachePlan``  — user-rep store: ``cache_user_reps``,
@@ -41,9 +44,21 @@ combination                                           resolution
                                                       user-only stage
 non-positive ``max_batch`` / ``min_bucket`` /         reject
 ``max_users_per_batch`` / ``max_coalesce`` /
-``max_cached_users`` / ``device_slots``; negative
-``linger_ms`` / shard count;
-``deadline_linger_frac`` outside [0, 1]
+``max_cached_users`` / ``device_slots`` /
+``max_inflight`` / ``shed_queue_depth`` /
+``degrade_queue_depth``; negative
+``linger_ms`` / ``deadline_headroom_ms`` /
+shard count; ``deadline_linger_frac`` outside
+[0, 1]; ``degrade_frac`` outside (0, 1]
+``degrade_queue_depth > shed_queue_depth``            reject — requests
+(both set)                                            would be shed outright
+                                                      before the cheaper
+                                                      degrade tier ever
+                                                      engaged
+admission thresholds (``shed_queue_depth`` /          drop them + warn (the
+``degrade_queue_depth`` / positive                    controller only runs
+``deadline_headroom_ms``) without                     with ``admission=
+``admission=True``                                    True``)
 ``device_resident`` without ``cache_user_reps``       drop
                                                       ``device_resident``
                                                       + warn (the device
@@ -129,7 +144,8 @@ class KernelPlan:
 
 @dataclasses.dataclass(frozen=True)
 class BatchPlan:
-    """Bucketing, cross-user coalescing, SLO linger, and hedging."""
+    """Bucketing, cross-user coalescing, SLO linger, hedging, the
+    continuous dispatch loop, and SLO-tiered admission control."""
     max_batch: int = 4096              # stage-2 row budget per dispatch
     min_bucket: int = 128              # smallest pow2 candidate bucket
     max_users_per_batch: int = 8       # rep-table slot budget per pack
@@ -137,6 +153,13 @@ class BatchPlan:
     linger_ms: float = 2.0             # batcher window for co-arrivals
     max_coalesce: int = 64             # request budget per batcher group
     deadline_linger_frac: float = 0.25  # linger shrink for deadline SLO
+    continuous: bool = True            # pack group k+1 while k executes
+    max_inflight: int = 2              # launched-but-uncollected groups
+    admission: bool = False            # SLO-tiered admission controller
+    shed_queue_depth: int | None = None    # best_effort shed threshold
+    degrade_queue_depth: int | None = None  # best_effort degrade threshold
+    degrade_frac: float = 0.5          # candidate fraction kept on degrade
+    deadline_headroom_ms: float = 0.0  # shed infeasible deadline budgets
 
 
 @dataclasses.dataclass(frozen=True)
@@ -202,7 +225,10 @@ _FIELD_TYPES: dict[str, dict[str, str]] = {
     "batch": {"max_batch": "int", "min_bucket": "int",
               "max_users_per_batch": "int", "hedging": "bool",
               "linger_ms": "num", "max_coalesce": "int",
-              "deadline_linger_frac": "num"},
+              "deadline_linger_frac": "num", "continuous": "bool",
+              "max_inflight": "int", "admission": "bool",
+              "shed_queue_depth": "int?", "degrade_queue_depth": "int?",
+              "degrade_frac": "num", "deadline_headroom_ms": "num"},
     "shard": {"shard_candidates": "bool_or_int", "compress_scores": "bool"},
     "cache": {"cache_user_reps": "bool", "max_cached_users": "int?",
               "device_resident": "bool", "device_slots": "int?"},
@@ -290,6 +316,26 @@ class ServePlan:
         _require(0.0 <= b.deadline_linger_frac <= 1.0,
                  f"deadline_linger_frac must be in [0, 1], got "
                  f"{b.deadline_linger_frac}")
+        _require(b.max_inflight >= 1,
+                 f"max_inflight must be >= 1, got {b.max_inflight}")
+        _require(b.shed_queue_depth is None or b.shed_queue_depth >= 1,
+                 f"shed_queue_depth must be >= 1 (or None for no shedding), "
+                 f"got {b.shed_queue_depth}")
+        _require(b.degrade_queue_depth is None or b.degrade_queue_depth >= 1,
+                 f"degrade_queue_depth must be >= 1 (or None for no "
+                 f"degrading), got {b.degrade_queue_depth}")
+        _require(0.0 < b.degrade_frac <= 1.0,
+                 f"degrade_frac must be in (0, 1], got {b.degrade_frac}")
+        _require(b.deadline_headroom_ms >= 0,
+                 f"deadline_headroom_ms must be >= 0, got "
+                 f"{b.deadline_headroom_ms}")
+        _require(not (b.shed_queue_depth is not None
+                      and b.degrade_queue_depth is not None
+                      and b.degrade_queue_depth > b.shed_queue_depth),
+                 f"degrade_queue_depth ({b.degrade_queue_depth}) > "
+                 f"shed_queue_depth ({b.shed_queue_depth}): requests would "
+                 f"be shed outright before the cheaper degrade tier ever "
+                 f"engaged — order the thresholds degrade <= shed")
         _require(not (isinstance(s.shard_candidates, int)
                       and not isinstance(s.shard_candidates, bool)
                       and s.shard_candidates < 0),
@@ -339,6 +385,23 @@ class ServePlan:
                 self, "graph",
                 dataclasses.replace(self.graph,
                                     **{n: False for n in rewrite_knobs}))
+        adm_knobs = [n for n, v in
+                     (("shed_queue_depth", b.shed_queue_depth),
+                      ("degrade_queue_depth", b.degrade_queue_depth),
+                      ("deadline_headroom_ms",
+                       b.deadline_headroom_ms or None))
+                     if v is not None]
+        if adm_knobs and not b.admission:
+            notes.append(
+                f"{'/'.join(adm_knobs)} without admission=True: the "
+                f"admission controller only runs when admission is enabled "
+                f"— resolved to defaults (set admission=True to keep them)")
+            object.__setattr__(
+                self, "batch",
+                dataclasses.replace(self.batch, shed_queue_depth=None,
+                                    degrade_queue_depth=None,
+                                    deadline_headroom_ms=0.0))
+            b = self.batch
         if c.device_resident and not c.cache_user_reps:
             notes.append(
                 "device_resident without cache_user_reps: the device tier "

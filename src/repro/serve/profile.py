@@ -6,14 +6,20 @@ call, and you cannot win a war you cannot see. ``StageProfiler`` splits a
 two-stage ranker:
 
 * ``stage1``   — user-tower compute on cache miss (device, blocking);
-* ``pack``     — host-side bucket assembly: staging-buffer fills, slot
+* ``pack``     — host-side bucket assembly: transfer-buffer fills, slot
   resolution, device-table row writes;
 * ``dispatch`` — enqueueing stage-2 executables (host time only when the
   async-unpack path is active; includes device time on the blocking
   hedged path);
 * ``device``   — waiting on stage-2 results (``block_until_ready``);
 * ``unpack``   — materializing scores to host and slicing per-request
-  views out of the bucket.
+  views out of the bucket;
+* ``queue_idle`` — continuous-loop time with the device idle AND the
+  request queue empty (nothing to overlap — true starvation, not loop
+  overhead);
+* ``overlap``  — host time spent forming-and-launching group k+1 while
+  group k was still executing on device (the work the continuous loop
+  hides under device compute; lockstep dispatch reports zero here).
 
 Phases are cumulative wall-clock totals plus call counts, cheap enough to
 stay on permanently (~two ``perf_counter`` calls per phase). The engine
@@ -31,7 +37,8 @@ import time
 from contextlib import contextmanager
 from typing import Iterator
 
-PHASES = ("stage1", "pack", "dispatch", "device", "unpack")
+PHASES = ("stage1", "pack", "dispatch", "device", "unpack",
+          "queue_idle", "overlap")
 
 
 class StageProfiler:

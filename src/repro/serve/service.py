@@ -125,10 +125,9 @@ class RankingService:
         engine = ServingEngine(graph, params, plan=plan,
                                cache=self.shared_cache,
                                cache_scope=scenario)
-        batcher = CoalescingBatcher(
-            engine, linger_ms=plan.batch.linger_ms,
-            max_coalesce=plan.batch.max_coalesce,
-            deadline_linger_frac=plan.batch.deadline_linger_frac)
+        # the whole batch section rides the plan spine: continuous loop,
+        # in-flight budget, and admission thresholds included
+        batcher = CoalescingBatcher.from_plan(engine, plan.batch)
         self._scenarios[scenario] = _Scenario(
             name=scenario, plan=plan, source_graph=graph,
             user_inputs=user_inputs, engine=engine, batcher=batcher)
@@ -199,8 +198,13 @@ class RankingService:
                     "batches": s.batcher.batches,
                     "coalesced_requests": s.batcher.coalesced_requests,
                     "queue_wait_ms": s.batcher.queue_wait_ms,
+                    "shed_requests": s.batcher.shed_requests,
+                    "shed_best_effort": s.batcher.shed_best_effort,
+                    "shed_deadline": s.batcher.shed_deadline,
+                    "degraded_requests": s.batcher.degraded_requests,
                     "stage1_calls": s.engine.stage1_calls,
                     "stage2_calls": s.engine.stage2_calls,
+                    "pipeline_forks": s.engine.pipeline_forks,
                     "profile": s.engine.profiler.snapshot(),
                     "device_store": (s.engine.device_store.stats()
                                      if s.engine.device_store is not None

@@ -239,6 +239,92 @@ class TestResolutionTable:
         assert rt == plan
 
 
+class TestAdmissionPlanFields:
+    """The continuous-loop/admission knobs ride the ServePlan spine:
+    validated scalars, documented resolutions, JSON round-trip — not
+    ad-hoc kwargs."""
+
+    def test_defaults(self):
+        b = BatchPlan()
+        assert b.continuous is True and b.max_inflight == 2
+        assert b.admission is False
+        assert b.shed_queue_depth is None and b.degrade_queue_depth is None
+        assert b.degrade_frac == 0.5 and b.deadline_headroom_ms == 0.0
+
+    @pytest.mark.parametrize("field,value", [
+        ("max_inflight", 0),
+        ("shed_queue_depth", 0),
+        ("degrade_queue_depth", -1),
+        ("degrade_frac", 0.0),
+        ("degrade_frac", 1.5),
+        ("deadline_headroom_ms", -1.0),
+    ])
+    def test_bad_scalars_rejected(self, field, value):
+        with pytest.raises(PlanError):
+            ServePlan(batch=BatchPlan(admission=True, **{field: value}))
+
+    def test_degrade_above_shed_rejected(self):
+        with pytest.raises(PlanError, match="degrade"):
+            ServePlan(batch=BatchPlan(admission=True, shed_queue_depth=8,
+                                      degrade_queue_depth=16))
+        # the legal ordering (degrade engages at or before shed) is silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            ServePlan(batch=BatchPlan(admission=True, shed_queue_depth=16,
+                                      degrade_queue_depth=8))
+
+    def test_thresholds_without_admission_resolve(self):
+        with pytest.warns(PlanResolutionWarning, match="admission"):
+            plan = ServePlan(batch=BatchPlan(shed_queue_depth=8,
+                                             deadline_headroom_ms=2.0))
+        assert plan.batch.shed_queue_depth is None
+        assert plan.batch.deadline_headroom_ms == 0.0
+        assert plan.resolution_notes
+
+    def test_json_round_trip(self):
+        plan = ServePlan().evolve(batch__continuous=False,
+                                  batch__max_inflight=4,
+                                  batch__admission=True,
+                                  batch__shed_queue_depth=64,
+                                  batch__degrade_queue_depth=32,
+                                  batch__degrade_frac=0.25,
+                                  batch__deadline_headroom_ms=3.0)
+        rt = ServePlan.from_json(plan.to_json())
+        assert rt == plan
+        assert rt.batch.continuous is False and rt.batch.max_inflight == 4
+        assert rt.batch.shed_queue_depth == 64
+        assert rt.batch.degrade_queue_depth == 32
+
+    def test_type_table_covers_new_fields(self):
+        with pytest.raises(PlanError, match="max_inflight"):
+            ServePlan(batch={"max_inflight": "2"})
+        with pytest.raises(PlanError, match="shed_queue_depth"):
+            ServePlan(batch={"shed_queue_depth": 1.5})
+        with pytest.raises(PlanError, match="continuous"):
+            ServePlan(batch={"continuous": 1})
+
+    def test_from_plan_wires_batcher(self, din_problem):
+        """CoalescingBatcher.from_plan carries every batch-section knob."""
+        from repro.serve import CoalescingBatcher
+        graph, params, _ = din_problem
+        plan = ServePlan().evolve(batch__hedging=False,
+                                  batch__continuous=False,
+                                  batch__max_inflight=3,
+                                  batch__admission=True,
+                                  batch__shed_queue_depth=9,
+                                  batch__degrade_queue_depth=4,
+                                  batch__degrade_frac=0.75,
+                                  batch__deadline_headroom_ms=1.5,
+                                  batch__linger_ms=7.0)
+        eng = ServingEngine(graph, params, plan=plan)
+        b = CoalescingBatcher.from_plan(eng, plan.batch, auto_start=False)
+        assert (b.continuous, b.max_inflight, b.admission) == (False, 3,
+                                                               True)
+        assert b.shed_queue_depth == 9 and b.degrade_queue_depth == 4
+        assert b.degrade_frac == 0.75 and b.deadline_headroom_ms == 1.5
+        assert b.linger_ms == 7.0
+
+
 class TestDeviceResidentPlan:
     """The ``CachePlan.device_resident`` knob follows the same spine rules
     as every other plan field: validated scalars, documented resolutions,
@@ -486,7 +572,7 @@ class TestRankingService:
             assert sc["device_resident"] is True
             prof = sc["profile"]
             assert set(prof) == {"stage1", "pack", "dispatch", "device",
-                                 "unpack"}
+                                 "unpack", "queue_idle", "overlap"}
             assert prof["pack"]["calls"] >= 1
             assert prof["pack"]["total_ms"] >= 0.0
             ds = sc["device_store"]
