@@ -18,7 +18,13 @@ hot path regresses. This gate — not per-run asserts inside ``bench_serve``
   hit that fails to clear 1.5× means the cache (or the device-resident
   dispatch path behind it) stopped paying for itself;
 * **observability**: ``serve/<mode>/breakdown`` rows (the per-phase
-  pack/dispatch/device/unpack profile) must be present for every mode.
+  pack/dispatch/device/unpack profile) must be present for every mode, as
+  must the ``serve/<mode>/latency_p50``/``latency_p99`` histogram rows
+  (the repro.obs percentile surface);
+* **obs overhead**: the mari obs-on-vs-off probe (``modes.mari.obs``) must
+  show tracing costing no more than ``--obs-tol`` in qps (default 1.5x) —
+  the tracer is a bounded ring behind one leaf lock, and this gate keeps
+  it cheap enough to turn on under load.
 
 Usage (what CI runs):
 
@@ -48,7 +54,8 @@ def _mode_latency(payload: dict, mode: str) -> tuple[float, float]:
     return float(m["cold_ms"]), float(m["hit_ms"])
 
 
-def check(baseline: dict, fresh: dict, max_regress: float) -> list[str]:
+def check(baseline: dict, fresh: dict, max_regress: float,
+          obs_tol: float = 1.5) -> list[str]:
     """Return the list of failure messages (empty == gate passes)."""
     failures: list[str] = []
     base_rows, fresh_rows = _rows(baseline), _rows(fresh)
@@ -86,10 +93,33 @@ def check(baseline: dict, fresh: dict, max_regress: float) -> list[str]:
     except KeyError as e:
         failures.append(f"fresh payload missing serve mode summary: {e}")
 
-    # -- observability: breakdown rows present ------------------------------
+    # -- observability: breakdown + latency-percentile rows present ---------
     for mode in MODES:
         if f"serve/{mode}/breakdown" not in fresh_rows:
             failures.append(f"missing breakdown row: serve/{mode}/breakdown")
+        for pct in ("latency_p50", "latency_p99"):
+            if f"serve/{mode}/{pct}" not in fresh_rows:
+                failures.append(f"missing histogram row: serve/{mode}/{pct}")
+        lat = fresh.get("serve", {}).get("modes", {}) \
+            .get(mode, {}).get("latency")
+        if not lat or lat.get("request_ms", {}).get("p99") is None:
+            failures.append(
+                f"{mode}: no request-latency histogram snapshot in payload "
+                f"(modes.{mode}.latency.request_ms.p99)")
+
+    # -- obs overhead: tracing-on qps within obs_tol of tracing-off ---------
+    obs = fresh.get("serve", {}).get("modes", {}).get("mari", {}).get("obs")
+    if not obs:
+        failures.append("missing obs overhead probe (modes.mari.obs)")
+    else:
+        print(f"# mari: trace-on qps ratio {obs['ratio']}x "
+              f"(on={obs['qps_trace_on']} off={obs['qps_trace_off']} qps, "
+              f"{obs['events']} events)")
+        if obs["ratio"] < 1.0 / obs_tol:
+            failures.append(
+                f"obs overhead: trace-on qps {obs['qps_trace_on']} < "
+                f"trace-off {obs['qps_trace_off']} / {obs_tol:g} — tracing "
+                f"too expensive to leave on under load")
 
     # informational (not gated: on-vs-off qps is asserted lossless in-bench
     # and tracked by the per-row trend above)
@@ -110,12 +140,16 @@ def main() -> int:
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="per-row us_per_call regression budget "
                          "(0.25 = fail beyond +25%%)")
+    ap.add_argument("--obs-tol", type=float, default=1.5,
+                    help="max allowed qps factor lost to tracing "
+                         "(1.5 = trace-on must keep >= 1/1.5 of the "
+                         "trace-off qps)")
     args = ap.parse_args()
     with open(args.baseline) as fh:
         baseline = json.load(fh)
     with open(args.fresh) as fh:
         fresh = json.load(fh)
-    failures = check(baseline, fresh, args.max_regress)
+    failures = check(baseline, fresh, args.max_regress, args.obs_tol)
     if failures:
         print(f"\nFAIL: {len(failures)} serve trend violation(s)")
         for msg in failures:

@@ -1,0 +1,130 @@
+"""CI validator for Chrome trace-event files written by ``repro.obs``.
+
+Checks that a trace produced by ``--trace`` (launch/serve, benchmarks/load,
+dist/runner, examples/serve_ranking) is something Perfetto will actually
+load and that the span structure obeys the tracer's contract:
+
+* the payload is well-formed Chrome trace JSON: a ``traceEvents`` list
+  whose entries all carry ``name``/``ph``/``pid``/``tid`` and a numeric,
+  non-negative ``ts`` (µs, rebased so the earliest event is 0);
+* complete events (``ph: X``) have a non-negative ``dur`` — a negative
+  duration means a clock went backwards through the span helpers;
+* begin/end events (``ph: B``/``E``) are BALANCED per (pid, tid): every
+  group opened on a synthetic track is closed by its collect, in order —
+  an orphaned ``B`` is a group that never collected (or an exception path
+  that skipped the ``end``);
+* required tracks exist: at least one ``thread_name`` metadata record
+  (real threads are named) and, when any group spans are present, at
+  least one synthetic ``group:N`` track;
+* optionally (``--require``), named events occur somewhere in the trace —
+  CI passes ``--require cache_hit submit`` to prove the smoke run
+  exercised the cache and admission paths, not just an idle loop.
+
+Exit 0 = valid; exit 1 prints every violation.
+
+    python -m benchmarks.check_trace trace.json --require cache_hit submit
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+_PHASES = {"X", "B", "E", "i", "M"}
+
+
+def validate(payload: dict, require: list[str] | None = None) -> list[str]:
+    """Return the list of violations (empty == the trace is valid)."""
+    errors: list[str] = []
+    if not isinstance(payload, dict) or \
+            not isinstance(payload.get("traceEvents"), list):
+        return ["payload is not a Chrome trace object with a "
+                "traceEvents list"]
+    events = payload["traceEvents"]
+    if not events:
+        errors.append("traceEvents is empty")
+
+    open_stacks: dict[tuple, list[str]] = {}
+    thread_names = 0
+    group_tracks: set[tuple] = set()
+    seen_names: set[str] = set()
+    for i, e in enumerate(events):
+        for field in ("name", "ph", "pid", "tid"):
+            if field not in e:
+                errors.append(f"event {i}: missing {field!r}: {e}")
+                break
+        else:
+            ph = e["ph"]
+            seen_names.add(e["name"])
+            if ph not in _PHASES:
+                errors.append(f"event {i}: unknown phase {ph!r}")
+                continue
+            if ph != "M":
+                ts = e.get("ts")
+                if not isinstance(ts, (int, float)) or ts < 0:
+                    errors.append(f"event {i} ({e['name']}): bad ts {ts!r}")
+            if ph == "X":
+                dur = e.get("dur")
+                if not isinstance(dur, (int, float)) or dur < 0:
+                    errors.append(
+                        f"event {i} ({e['name']}): X event with bad "
+                        f"dur {dur!r}")
+            elif ph == "B":
+                open_stacks.setdefault((e["pid"], e["tid"]),
+                                       []).append(e["name"])
+            elif ph == "E":
+                stack = open_stacks.get((e["pid"], e["tid"]))
+                if not stack:
+                    errors.append(
+                        f"event {i} ({e['name']}): E without open B on "
+                        f"pid={e['pid']} tid={e['tid']}")
+                else:
+                    stack.pop()
+            elif ph == "M":
+                if e["name"] == "thread_name":
+                    thread_names += 1
+                    tname = (e.get("args") or {}).get("name", "")
+                    if tname.startswith("group:"):
+                        group_tracks.add((e["pid"], e["tid"]))
+
+    for (pid, tid), stack in open_stacks.items():
+        if stack:
+            errors.append(
+                f"unbalanced spans on pid={pid} tid={tid}: "
+                f"{len(stack)} B event(s) never closed ({stack})")
+    if thread_names == 0:
+        errors.append("no thread_name metadata — tracks are unnamed")
+    if "group" in seen_names and not group_tracks:
+        errors.append("group spans present but no synthetic group:N track")
+    for name in require or []:
+        if name not in seen_names:
+            errors.append(f"required event {name!r} absent from the trace")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace-event JSON file")
+    ap.add_argument("--require", nargs="*", default=None, metavar="EVENT",
+                    help="event names that must appear at least once")
+    args = ap.parse_args()
+    try:
+        with open(args.trace) as fh:
+            payload = json.load(fh)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"FAIL: cannot read {args.trace}: {e}")
+        return 1
+    errors = validate(payload, args.require)
+    if errors:
+        print(f"FAIL: {len(errors)} trace violation(s) in {args.trace}")
+        for msg in errors:
+            print(f"  - {msg}")
+        return 1
+    n = len(payload["traceEvents"])
+    pids = len({e["pid"] for e in payload["traceEvents"]})
+    print(f"OK: {args.trace} valid ({n} events, {pids} process(es))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

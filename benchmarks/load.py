@@ -124,6 +124,10 @@ def build_plan(preset: str, variant: str, args):
         cache__device_resident=True, cache__device_slots=args.device_slots)
     if variant == "lockstep":
         plan = plan.evolve(batch__continuous=False)
+    if getattr(args, "trace", None):
+        # ring-buffer tracing: bounded memory even over long sweeps, and
+        # the retained window is the newest (most loaded) segment
+        plan = plan.evolve(obs__trace=True)
     return plan
 
 
@@ -427,6 +431,10 @@ def main() -> None:
                     help="assert the continuous-vs-lockstep acceptance "
                          "criteria on this run")
     ap.add_argument("--json", metavar="PATH", default=None)
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="enable ObsPlan tracing on every variant and "
+                         "write a Perfetto-loadable Chrome trace here "
+                         "(one track group per preset:variant scenario)")
     ap.add_argument("--presets", default=None,
                     help="comma list of ServePlan presets (default: "
                          "paper,vanilla; smoke: paper)")
@@ -511,6 +519,14 @@ def main() -> None:
             results[preset] = run_preset(svc, preset, wl, ring, args, rng)
             results[preset]["preset"] = preset
             results[preset]["plan"] = plans[preset]
+        if args.trace:
+            from repro.obs import write_trace
+            tracers = {sc: svc.engine(sc).tracer for sc in svc.scenarios
+                       if svc.engine(sc).tracer is not None}
+            write_trace(args.trace, tracers)
+            print(f"# wrote trace {args.trace} "
+                  f"({sum(len(t) for t in tracers.values())} events)",
+                  flush=True)
 
     if args.smoke:
         smoke_asserts(results)

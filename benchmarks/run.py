@@ -262,7 +262,9 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
         # 1.25× cold) moved to benchmarks/check_serve_trend.py — the CI
         # trend gate owns ALL latency contracts now, against both the
         # committed baseline and the fresh rows.
-        eng.profiler.reset()                    # breakdown covers timed loop
+        # atomic snapshot+reset: discards the warmup phases in one lock
+        # acquisition, so the breakdown covers exactly the timed loop
+        eng.profiler.snapshot(reset=True)
         cold, hit = [], []
         for it in range(iters):
             cold.append(eng.score(req(it + 1, ver=it)).latency_ms)
@@ -310,6 +312,11 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
         walls_off, walls_on = [], []
         with CoalescingBatcher(eng, linger_ms=1.0) as batcher:
             co_ref = batcher.score_many(burst)  # compile coalesced shapes
+            # window the latency histograms to the timed passes: a compile
+            # landing in an 80-sample p99 would pin the latency_p99 row
+            # below to compile-time noise
+            batcher.request_latency.reset()
+            batcher.queue_wait.reset()
             for _ in range(qps_passes):
                 t0 = _time.perf_counter()
                 for r in burst:
@@ -335,6 +342,57 @@ def bench_serve(scale: float = 0.12, B: int = 2000, iters: int = 15,
              f"B={qps_B};users={qps_users};qps={qps_on:.1f};"
              f"vs_off={qps_on / qps_off:.2f}x",
              plan=plan, preset=presets[mode])
+
+        # -- latency distribution (repro.obs histograms): every request the
+        # qps loop pushed through the batcher, p50/p99 without retaining
+        # samples — the same numbers RankingService.stats() reports. ------
+        lat_snap = batcher.request_latency.snapshot()
+        qw_snap = batcher.queue_wait.snapshot()
+        modes[mode]["latency"] = {"request_ms": lat_snap,
+                                  "queue_wait_ms": qw_snap}
+        _row(f"serve/{mode}/latency_p50", lat_snap["p50"] * 1e3,
+             f"B={qps_B};n={lat_snap['count']};p90={lat_snap['p90']:.2f}ms",
+             plan=plan, preset=presets[mode])
+        _row(f"serve/{mode}/latency_p99", lat_snap["p99"] * 1e3,
+             f"B={qps_B};queue_wait_p99={qw_snap['p99']:.3f}ms",
+             plan=plan, preset=presets[mode])
+
+        # -- observability overhead (mari only): the SAME burst through a
+        # second engine built with ObsPlan.trace on, passes interleaved
+        # with a plain engine so machine drift lands on both sides. The
+        # trend gate bounds the ratio: tracing must stay cheap enough to
+        # leave on under load. ---------------------------------------------
+        if mode == "mari":
+            obs_eng = ServingEngine(graph, params,
+                                    plan=plan.evolve(obs__trace=True))
+            for r in burst:
+                obs_eng.score(r)
+            w_off, w_obs = [], []
+            with CoalescingBatcher(eng, linger_ms=1.0) as b_off, \
+                    CoalescingBatcher(obs_eng, linger_ms=1.0) as b_on:
+                b_off.score_many(burst)         # warm both batchers
+                b_on.score_many(burst)
+                for _ in range(qps_passes):
+                    t0 = _time.perf_counter()
+                    b_off.score_many(burst)
+                    w_off.append(_time.perf_counter() - t0)
+                    t0 = _time.perf_counter()
+                    b_on.score_many(burst)
+                    w_obs.append(_time.perf_counter() - t0)
+            qps_plain = qps_users / float(np.median(w_off))
+            qps_obs = qps_users / float(np.median(w_obs))
+            modes[mode]["obs"] = {
+                "qps_trace_off": round(qps_plain, 1),
+                "qps_trace_on": round(qps_obs, 1),
+                "ratio": round(qps_obs / qps_plain, 3),
+                "events": len(obs_eng.tracer),
+            }
+            _row(f"serve/{mode}/qps/trace=on", 1e6 / qps_obs,
+                 f"B={qps_B};users={qps_users};qps={qps_obs:.1f};"
+                 f"vs_trace_off={qps_obs / qps_plain:.2f}x;"
+                 f"events={len(obs_eng.tracer)}",
+                 plan=plan, preset=presets[mode])
+            obs_eng.close()
         eng.close()
     _JSON_EXTRA["serve"] = {"config": "paper_ranking", "scale": scale,
                             "B": B, "iters": iters, "modes": modes}

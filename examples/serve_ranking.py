@@ -49,6 +49,10 @@ def main():
     ap.add_argument("--use-pallas", action="store_true",
                     help="route mari_dense through the fused Pallas kernel "
                          "(interpret mode off-TPU: slow, validation only)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Perfetto-loadable Chrome trace of parts "
+                         "2+3 (coalescing + overload) — overlapped groups "
+                         "show as concurrent group:N tracks")
     args = ap.parse_args()
 
     graph, cfg = build_paper_ranking_model(PaperRankingConfig().scaled(args.scale))
@@ -128,7 +132,8 @@ def main():
     # hedging off for the timed comparison: duplicate executions on a
     # shared CPU would contaminate the seq-vs-coalesced req/s numbers
     eng = ServingEngine(graph, params, plan=base_plan.evolve(
-        graph__mode="mari", batch__hedging=False))
+        graph__mode="mari", batch__hedging=False,
+        obs__trace=args.trace is not None))
     rng = np.random.default_rng(0)
     keys = jax.random.split(jax.random.PRNGKey(7), args.requests)
     burst = [make_request(r, keys[r],
@@ -177,7 +182,8 @@ def main():
         graph__mode="mari", batch__hedging=False, batch__continuous=True,
         batch__admission=True, batch__shed_queue_depth=8,
         batch__degrade_queue_depth=4, batch__degrade_frac=0.5,
-        batch__linger_ms=args.linger_ms)
+        batch__linger_ms=args.linger_ms,
+        obs__trace=args.trace is not None)
     svc = RankingService(over_plan)
     svc.register("ranking", graph=graph, params=params, plan=over_plan)
     for r in burst[:4]:                       # warm shapes + rep caches
@@ -214,6 +220,18 @@ def main():
           f"degraded_requests={sc['degraded_requests']}  "
           f"pipeline_forks={sc['pipeline_forks']}")
     print("deadline tier untouched under overload ✓")
+    if args.trace:
+        from repro.obs import write_trace
+        tracers = {}
+        if eng.tracer is not None:
+            tracers["coalesce"] = eng.tracer      # part 2 (events persist)
+        t3 = svc.engine("ranking").tracer
+        if t3 is not None:
+            tracers["overload"] = t3              # part 3
+        write_trace(args.trace, tracers)
+        print(f"wrote trace -> {args.trace} "
+              f"({sum(len(t) for t in tracers.values())} events; load it "
+              f"at https://ui.perfetto.dev)")
     svc.close()
 
 

@@ -88,6 +88,8 @@ def build_plan(args) -> ServePlan:
         # multi-process engines fall back at engine level (per-process
         # asynchronous table writes cannot stay SPMD-identical).
         over["cache__device_resident"] = True
+    if getattr(args, "trace", None):
+        over["obs__trace"] = True
     return base.evolve(**over)
 
 
@@ -143,6 +145,7 @@ def run_worker(args) -> int:
             else build_plan(args))
     compress = plan.shard.compress_scores
     records = []
+    tracers = {}
     for mode in args.modes.split(","):
         mplan = plan.evolve(graph__mode=mode)
         ref = ref_scores = None
@@ -196,11 +199,16 @@ def run_worker(args) -> int:
             # the dispatch path stays attributable per shard count
             rec["breakdown"] = eng.profiler.snapshot()
         records.append(rec)
+        if eng.tracer is not None:
+            tracers[mode] = eng.tracer    # events outlive the engine
         eng.close()
         if ref is not None:
             ref.close()
         if topo.process_id == 0:
             print(json.dumps(rec), flush=True)
+    if args.trace:
+        from repro.obs import write_trace
+        write_trace(args.trace, tracers)
     if topo.process_id == 0:
         print(json.dumps({"ok": True, "records": len(records)}), flush=True)
     return 0
@@ -239,6 +247,10 @@ def spawn(args) -> int:
         for flag in ("verify", "bench"):
             if getattr(args, flag):
                 cmd.append("--" + flag.replace("_", "-"))
+        if args.trace:
+            # per-worker trace file; the spawner merges them afterwards
+            # with pid = shard index so all workers share one timeline
+            cmd += ["--trace", f"{args.trace}.w{pid}"]
         out_f = tempfile.TemporaryFile(mode="w+")
         err_f = tempfile.TemporaryFile(mode="w+")
         workers.append((subprocess.Popen(cmd, env=env, stdout=out_f,
@@ -265,6 +277,13 @@ def spawn(args) -> int:
             print(f"[runner] worker {pid} failed rc={p.returncode}:\n"
                   + err[-3000:], file=sys.stderr)
             rc = 1
+    if args.trace and rc == 0:
+        from repro.obs import merge_trace_files
+        paths = [f"{args.trace}.w{pid}" for pid in range(args.spawn)]
+        merge_trace_files(paths, args.trace)    # pid i = shard i
+        for p in paths:
+            os.remove(p)
+        print(f"[runner] merged {args.spawn} worker traces -> {args.trace}")
     return rc
 
 
@@ -302,6 +321,9 @@ def main() -> int:
     ap.add_argument("--plan-json", default=None, metavar="JSON",
                     help="worker-side: the serialized plan shipped by the "
                          "spawner")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="spawner: merge per-worker Chrome traces here "
+                         "(pid = shard index); worker: write own trace")
     ap.add_argument("--timeout", type=int, default=900)
     args = ap.parse_args()
     if args.spawn:

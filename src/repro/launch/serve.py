@@ -15,6 +15,11 @@ Multi-scenario (a ``RankingService`` routing an interleaved stream)::
 
 ``--smoke`` is on by default; ``--no-smoke`` builds the full-size
 registry models.
+
+``--trace out.json`` turns on ``ObsPlan.trace`` for the run and writes a
+Chrome trace-event file (load it at https://ui.perfetto.dev) covering the
+whole request lifecycle — stage-1 spans, cache hit/miss instants, pack/
+dispatch/collect, and one synthetic track per outstanding group.
 """
 from __future__ import annotations
 
@@ -50,6 +55,10 @@ def build_plan(args) -> ServePlan:
         over["kernel__gather_attention"] = args.gather_attention
     if args.use_pallas is not None:
         over["kernel__use_pallas"] = args.use_pallas
+    if args.continuous is not None:
+        over["batch__continuous"] = args.continuous
+    if args.trace:
+        over["obs__trace"] = True
     return plan.evolve(**over) if over else plan
 
 
@@ -88,6 +97,12 @@ def serve_single(args, plan: ServePlan) -> None:
                              if k2 not in user_in})
         res = engine.score(req)
         lats.append(res.latency_ms)
+    if args.trace and engine.tracer is not None:
+        from repro.obs import write_trace
+        write_trace(args.trace, {args.arch: engine.tracer})
+        print(f"[serve] wrote trace -> {args.trace} "
+              f"({len(engine.tracer)} events, "
+              f"{engine.tracer.dropped} dropped)")
     engine.close()
     _summary(f"arch={args.arch} mode={engine.mode}",
              lats[min(2, len(lats) - 1):])   # drop compile warmup
@@ -123,6 +138,15 @@ def serve_multi(args, plan: ServePlan, scenarios: list[str]) -> None:
         print(f"[serve] shared_cache users={cache['users']} "
               f"hits={cache['hits']} misses={cache['misses']} "
               f"evictions={cache['evictions']}")
+        if args.trace:
+            tracers = {sc: svc.engine(sc).tracer for sc in svc.scenarios
+                       if svc.engine(sc).tracer is not None}
+            if tracers:
+                from repro.obs import write_trace
+                write_trace(args.trace, tracers)
+                n = sum(len(t) for t in tracers.values())
+                print(f"[serve] wrote trace -> {args.trace} "
+                      f"({n} events across {len(tracers)} scenarios)")
 
 
 def main():
@@ -163,6 +187,13 @@ def main():
                     action=argparse.BooleanOptionalAction, default=None,
                     help="route mari_dense + gather_einsum through the "
                          "Pallas kernels (interpret mode off-TPU)")
+    ap.add_argument("--continuous",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="continuous (two-phase overlapped) dispatch loop "
+                         "in the scenario batchers")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="enable ObsPlan tracing and write a Perfetto-"
+                         "loadable Chrome trace-event JSON here")
     args = ap.parse_args()
 
     plan = build_plan(args)

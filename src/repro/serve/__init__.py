@@ -41,6 +41,12 @@ grown into an async, multi-user subsystem:
 * ``service`` — ``RankingService``: multi-scenario router hosting several
   registry models behind one ``submit(scenario, request)`` API, with a
   shared rep-cache budget across scenario engines.
+
+Observability rides the plan spine too (``ObsPlan``): ``obs__trace=True``
+threads a ``repro.obs.Tracer`` through engine/batcher/cache (request and
+group timelines, exported to Perfetto via ``repro.obs.export``), and
+``obs__metrics`` (on by default) backs ``RankingService.stats()``'s
+p50/p99 request-latency and queue-wait histograms.
 """
 from repro.serve.batcher import (  # noqa: F401
     SLO_BEST_EFFORT,
@@ -63,6 +69,7 @@ from repro.serve.plan import (  # noqa: F401
     CachePlan,
     GraphPlan,
     KernelPlan,
+    ObsPlan,
     PlanError,
     PlanResolutionWarning,
     ServePlan,

@@ -94,6 +94,7 @@ from collections import deque
 from concurrent.futures import Future
 from typing import Sequence
 
+from repro.obs.metrics import MetricsRegistry
 from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
 
 SLO_BEST_EFFORT = "best_effort"
@@ -177,12 +178,34 @@ class CoalescingBatcher:
         self.shed_best_effort = 0     # ... of the best_effort class
         self.shed_deadline = 0        # ... of the deadline class (infeasible)
         self.degraded_requests = 0    # admitted with a truncated pool
-        # cumulative submit->handoff wait: the queueing share of end-to-end
-        # latency that the engine's StageProfiler cannot see (it starts
-        # timing only once the group reaches the engine)
-        self.queue_wait_ms = 0.0
+        # observability (repro.obs): the engine's tracer (None when
+        # plan.obs.trace is off) and metrics registry. Queue wait and
+        # request latency are recorded as log-bucketed histograms —
+        # Histogram.record is locked, so the worker's observes and
+        # stats() reads can no longer race (the old cumulative
+        # queue_wait_ms was an unlocked float mutated on the worker
+        # thread and read bare by RankingService.stats()); a private
+        # registry keeps the histograms alive when engine metrics are
+        # off, so the queue_wait_ms compat property always works.
+        self.tracer = getattr(engine, "tracer", None)
+        self.metrics = getattr(engine, "metrics", None) or MetricsRegistry()
+        self.queue_wait = self.metrics.histogram("queue_wait_ms")
+        self.request_latency = self.metrics.histogram("request_latency_ms")
+        for name in ("requests", "batches", "coalesced_requests",
+                     "deadline_requests", "shed_requests",
+                     "shed_best_effort", "shed_deadline",
+                     "degraded_requests"):
+            self.metrics.gauge(name, lambda n=name: getattr(self, n))
         if auto_start:
             self.start()
+
+    @property
+    def queue_wait_ms(self) -> float:
+        """Cumulative submit->handoff wait — the queueing share of
+        end-to-end latency that the engine's StageProfiler cannot see.
+        Kept for compat as the derived total of the ``queue_wait_ms``
+        histogram (which carries the p50/p99 tail the total hides)."""
+        return self.queue_wait.total
 
     @classmethod
     def from_plan(cls, engine: ServingEngine, batch,
@@ -252,6 +275,9 @@ class CoalescingBatcher:
             self.shed_deadline += 1
         else:
             self.shed_best_effort += 1
+        if self.tracer is not None:
+            self.tracer.instant("admission_shed", slo=slo,
+                                depth=self._queued, reason=reason)
         # claim-then-fail: the waiter sees the typed error immediately —
         # a shed future must never hang
         fut.set_running_or_notify_cancel()
@@ -322,11 +348,22 @@ class CoalescingBatcher:
                             req = slim
                             degraded = True
                             self.degraded_requests += 1
+                            if self.tracer is not None:
+                                self.tracer.instant(
+                                    "admission_degrade",
+                                    depth=self._queued, user=req.user_id)
             now = time.perf_counter()
             deadline_at = (now + deadline_ms / 1e3
                            if deadline_ms is not None else None)
             self._queued += 1
-            self._q.put(_Item(prio=_PRIO[slo], seq=self._next_seq(),
+            seq = self._next_seq()
+            if self.tracer is not None and self.tracer.sampled(seq):
+                # req=seq is the request's trace identity: queue_claim /
+                # group_launch / resolve events carry the same seq, and
+                # group_launch links it to the engine's group id
+                self.tracer.instant("submit", req=seq, slo=slo,
+                                    user=req.user_id, degraded=degraded)
+            self._q.put(_Item(prio=_PRIO[slo], seq=seq,
                               req=req, fut=fut, deadline_at=deadline_at,
                               submitted_at=now, degraded=degraded))
         return fut
@@ -449,15 +486,24 @@ class CoalescingBatcher:
         # future can no longer be cancelled — so set_result below cannot
         # race a cancel and kill the worker with InvalidStateError
         now = time.perf_counter()
-        self.queue_wait_ms += sum(
-            (now - it.submitted_at) * 1e3 for it in group
-            if it.submitted_at is not None)
+        trc = self.tracer
+        for it in group:
+            if it.submitted_at is None:
+                continue
+            wait_ms = (now - it.submitted_at) * 1e3
+            self.queue_wait.record(wait_ms)
+            if trc is not None and trc.sampled(it.seq):
+                trc.instant("queue_claim", req=it.seq,
+                            wait_ms=round(wait_ms, 3))
         claimed = [it for it in group
                    if it.fut.set_running_or_notify_cancel()]
         if not claimed:
             return
         reqs = [it.req for it in claimed]
         if not continuous:
+            if trc is not None:
+                trc.instant("group_launch",
+                            reqs=[it.seq for it in claimed])
             try:
                 results = self.engine.score_coalesced(reqs)
             except BaseException as e:      # propagate to every waiter
@@ -472,6 +518,12 @@ class CoalescingBatcher:
         except BaseException as e:
             self._fail(claimed, e)
             return
+        if trc is not None:
+            # request -> group linkage: each member seq joins the engine
+            # group id the two-phase API assigned this launch
+            trc.instant("group_launch", group=getattr(handle, "gid", None),
+                        reqs=[it.seq for it in claimed],
+                        overlapped=overlapped)
         if overlapped and prof is not None:
             # host work done UNDER a still-executing previous group — the
             # time the continuous loop hides beneath device compute
@@ -506,7 +558,13 @@ class CoalescingBatcher:
         self.batches += 1
         if len(claimed) > 1:
             self.coalesced_requests += len(claimed)
+        now = time.perf_counter()
+        trc = self.tracer
         for it, res in zip(claimed, results):
             if it.degraded:
                 res.degraded = True
+            if it.submitted_at is not None:
+                self.request_latency.record((now - it.submitted_at) * 1e3)
+            if trc is not None and trc.sampled(it.seq):
+                trc.instant("resolve", req=it.seq)
             it.fut.set_result(res)

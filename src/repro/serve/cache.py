@@ -70,6 +70,14 @@ class UserRepCache:
         self.hits = 0
         self.misses = 0
         self._listeners: list[Callable[[Hashable], None]] = []
+        self._tracer = None              # repro.obs.Tracer, when tracing
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a ``repro.obs.Tracer``: every removal (eviction,
+        supersede, invalidate, clear) emits a ``cache_evict`` instant.
+        The tracer's lock is a leaf, so emitting is deadlock-free from
+        any caller."""
+        self._tracer = tracer
 
     def subscribe(self, on_remove: Callable[[Hashable], None]) -> None:
         """Register a callback fired with ``user_id`` whenever that user's
@@ -83,6 +91,10 @@ class UserRepCache:
     def _notify(self, removed: Sequence[Hashable]) -> None:
         if not removed:
             return
+        trc = self._tracer
+        if trc is not None:
+            for uid in removed:
+                trc.instant("cache_evict", user=uid)
         # snapshot under the lock (subscribe appends under it too), then
         # fire outside it — callbacks must be free to touch other locks
         with self._lock:
@@ -220,6 +232,13 @@ class DeviceRepStore:
         self.overflows = 0   # ensure_rows rows that could not get a slot
         self.forks = 0       # copy-on-write generation forks (writes armed
         #                      by fork_next_write under in-flight launches)
+        self._tracer = None  # repro.obs.Tracer, when tracing
+
+    def set_tracer(self, tracer) -> None:
+        """Attach a ``repro.obs.Tracer`` for slot-lifecycle instants
+        (``slot_steal`` / ``table_fork`` / ``slot_drop``). Emitted under
+        the store lock — the tracer's lock is a leaf, so that is safe."""
+        self._tracer = tracer
 
     # -- allocation ---------------------------------------------------------
     def _alloc(self, row: Mapping[str, Any]) -> None:
@@ -304,6 +323,9 @@ class DeviceRepStore:
                             self._tables, dict(reps), np.int32(slot))
                         self._fork_pending = False
                         self.forks += 1
+                        if self._tracer is not None:
+                            self._tracer.instant("table_fork", user=user,
+                                                 slot=slot)
                     else:
                         self._tables = self._writer(self._tables,
                                                     dict(reps),
@@ -328,6 +350,8 @@ class DeviceRepStore:
             if user not in protected:
                 _, slot = self._map.pop(user)
                 self.recycles += 1
+                if self._tracer is not None:
+                    self._tracer.instant("slot_steal", user=user, slot=slot)
                 return slot
         return None
 
@@ -341,6 +365,9 @@ class DeviceRepStore:
             if entry is not None:
                 self._free.append(entry[1])
                 self.drops += 1
+                if self._tracer is not None:
+                    self._tracer.instant("slot_drop", user=user,
+                                         slot=entry[1])
 
     def slot_of(self, user: Hashable) -> int | None:
         with self._lock:

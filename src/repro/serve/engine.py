@@ -119,6 +119,8 @@ from repro.core.mari import mari_rewrite, convert_params
 from repro.core.split import split_two_stage
 from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import DEFAULT_CAPACITY, Tracer
 from repro.serve.cache import DeviceRepStore, UserRepCache
 from repro.serve.hedging import HedgedRunner, HedgePolicy
 from repro.serve.plan import ServePlan
@@ -192,6 +194,9 @@ class _InFlight:
     packs: list
     launched: list                # per pack: (outs, hedged, blocked)
     t0: float
+    gid: int = 0                  # engine-wide group id (trace context)
+    track: str | None = None      # synthetic trace track while outstanding
+    slot: int = -1                # track slot, freed at collect
 
 
 class ServingEngine:
@@ -454,6 +459,40 @@ class ServingEngine:
         # cast (or raise mid-call) by the buffer fill
         self._feed_sig: dict[str, tuple] | None = None
         self.profiler = StageProfiler()
+
+        # -- observability (plan.obs): ring-buffer tracing + histogram
+        # metrics (repro.obs). Tracing off keeps the hot path at a
+        # `tracer is None` check; the cache tiers get the tracer for
+        # eviction / slot-steal / fork instants. --
+        self.tracer: Tracer | None = None
+        if plan.obs.trace:
+            self.tracer = Tracer(
+                capacity=plan.obs.trace_capacity or DEFAULT_CAPACITY,
+                sample_every=plan.obs.sample_every)
+            self.cache.set_tracer(self.tracer)
+            if self._device_store is not None:
+                self._device_store.set_tracer(self.tracer)
+        self.metrics: MetricsRegistry | None = None
+        if plan.obs.metrics:
+            self.metrics = MetricsRegistry()
+            # the scattered counters, unified behind one snapshot():
+            # gauges are sampled lazily, so registration costs nothing
+            # on the hot path
+            for name, fn in (
+                    ("cache_hits", lambda: self.cache.hits),
+                    ("cache_misses", lambda: self.cache.misses),
+                    ("cache_evictions", lambda: self.cache.evictions),
+                    ("stage1_calls", lambda: self.stage1_calls),
+                    ("stage2_calls", lambda: self.stage2_calls),
+                    ("coalesced_calls", lambda: self.coalesced_calls),
+                    ("pipeline_forks", lambda: self.pipeline_forks)):
+                self.metrics.gauge(name, fn)
+            self._group_wall_hist = self.metrics.histogram("group_wall_ms")
+        else:
+            self._group_wall_hist = None
+        self._group_seq = 0           # begin_coalesced calls (group ids)
+        self._group_slots: set[int] = set()  # outstanding trace tracks
+        self._trace_req_seq = 0       # engine-side request sampling seq
         self.hedge_policy = hedge_policy or HedgePolicy()
         self.hedging = hedging
         self._hedged = (HedgedRunner(self._dispatch, self.hedge_policy)
@@ -601,6 +640,9 @@ class ServingEngine:
             self.stage1_calls += 1
             ms = (time.perf_counter() - t0) * 1e3
             self.profiler.add("stage1", ms / 1e3)
+            if self.tracer is not None:
+                self.tracer.complete("stage1", t0, ms / 1e3,
+                                     user=req.user_id)
         else:
             # single-stage: the "representation" is the raw user feed dict
             # (never cached — cache_user_reps is forced off above: there is
@@ -648,10 +690,46 @@ class ServingEngine:
         are still reading, so cold users cost one table copy instead of
         a pipeline drain."""
         t0 = time.perf_counter()
+        trc = self.tracer
+        self._group_seq += 1
+        gid = self._group_seq
+        g_slot, g_track = -1, None
+        if trc is not None:
+            # one synthetic trace track per OUTSTANDING group: the lowest
+            # free slot, released at collect — two overlapped groups land
+            # on two tracks, so their concurrency is visible in Perfetto
+            # (begin/collect are serialized by the engine contract, so the
+            # slot set needs no lock)
+            g_slot = 0
+            while g_slot in self._group_slots:
+                g_slot += 1
+            self._group_slots.add(g_slot)
+            g_track = f"group:{g_slot}"
+            trc.begin("group", track=g_track, group=gid, reqs=len(reqs))
+        try:
+            return self._begin_coalesced_body(reqs, t0, gid, g_track, g_slot)
+        except BaseException:
+            # close the group span on ANY failure after it opened — stage 1,
+            # packing, or launch — so traces stay B/E-balanced and the
+            # synthetic track slot is released for the next group
+            if trc is not None:
+                trc.end("group", track=g_track, group=gid, error=True)
+                self._group_slots.discard(g_slot)
+            raise
+
+    def _begin_coalesced_body(self, reqs: Sequence[ServeRequest], t0: float,
+                              gid: int, g_track: str | None, g_slot: int
+                              ) -> _InFlight:
         prof = self.profiler
+        trc = self.tracer
         infos: list[_ReqInfo] = []
         for ri, req in enumerate(reqs):
             reps, hit, s1ms = self._user_reps(req)
+            if trc is not None:
+                self._trace_req_seq += 1
+                if trc.sampled(self._trace_req_seq):
+                    trc.instant("cache_hit" if hit else "cache_miss",
+                                group=gid, user=req.user_id)
             infos.append(_ReqInfo(
                 reps=reps, hit=hit, stage1_ms=s1ms,
                 chunks=self._chunk(req.candidate_feeds),
@@ -711,6 +789,9 @@ class ServingEngine:
                 self.pipeline_forks += 1
                 self._device_store.fork_next_write()
                 forked = True
+                if trc is not None:
+                    trc.instant("fork_armed", group=gid,
+                                inflight=len(self._inflight))
 
         # write barrier: EVERY table-row write of the call happens here,
         # before any launch — in-place donated writes must never run under
@@ -732,9 +813,22 @@ class ServingEngine:
         launched = []
         try:
             for (pack_items, slot_reps, _), ds in zip(packs, dslots):
+                t_pk = time.perf_counter()
                 with prof.phase("pack"):
                     prep = self._prepare_pack(pack_items, slot_reps, ds)
+                t_ds = time.perf_counter()
                 launched.append(self._launch_pack(prep))
+                if trc is not None:
+                    total = sum(n for _, _, _, n in pack_items)
+                    bucket = int(prep[1].shape[0])     # uidx rows
+                    trc.complete(
+                        "pack", t_pk, t_ds - t_pk, group=gid,
+                        bucket=bucket, rows=total, pad=bucket - total,
+                        users=len(slot_reps),
+                        path="slots" if ds is not None else "restack")
+                    trc.complete("dispatch", t_ds,
+                                 time.perf_counter() - t_ds, group=gid,
+                                 bucket=bucket)
         except BaseException:
             # never leave untracked launches behind: a later call's table
             # write could otherwise run under them
@@ -744,8 +838,12 @@ class ServingEngine:
             raise
 
         handle = _InFlight(reqs=reqs, infos=infos, packs=packs,
-                           launched=launched, t0=t0)
+                           launched=launched, t0=t0, gid=gid,
+                           track=g_track, slot=g_slot)
         self._inflight.append(handle)
+        if trc is not None:
+            trc.complete("begin_coalesced", t0, time.perf_counter() - t0,
+                         group=gid, reqs=len(reqs), packs=len(packs))
         return handle
 
     def _drain_inflight(self) -> None:
@@ -780,6 +878,8 @@ class ServingEngine:
         results. Handles may be collected in any order; each exactly
         once."""
         prof = self.profiler
+        trc = self.tracer
+        t0c = time.perf_counter()
         try:
             self._inflight.remove(handle)
         except ValueError:
@@ -814,6 +914,14 @@ class ServingEngine:
                 per_req_hedged[ri] += hedged
 
         wall_ms = (time.perf_counter() - handle.t0) * 1e3
+        if self._group_wall_hist is not None:
+            self._group_wall_hist.record(wall_ms)
+        if trc is not None:
+            trc.complete("collect", t0c, time.perf_counter() - t0c,
+                         group=handle.gid, packs=len(packs))
+            if handle.track is not None:
+                trc.end("group", track=handle.track, group=handle.gid)
+                self._group_slots.discard(handle.slot)
         return [ServeResult(
             scores=np.concatenate(per_req_scores[ri], axis=0),
             latency_ms=wall_ms, n_batches=per_req_packs[ri],

@@ -25,7 +25,12 @@ Sections (each its own frozen dataclass):
   (False / True / shard count), ``compress_scores``;
 * ``CachePlan``  — user-rep store: ``cache_user_reps``,
   ``max_cached_users``, ``device_resident`` (persistent slot-allocated
-  device rep tables + donated stage-2 buffers), ``device_slots``.
+  device rep tables + donated stage-2 buffers), ``device_slots``;
+* ``ObsPlan``    — observability (``repro.obs``): ``trace`` (ring-buffer
+  request/group tracing, off by default), ``trace_capacity``,
+  ``sample_every`` (per-request event thinning), ``metrics``
+  (log-bucketed latency/queue-wait histograms + unified counter
+  snapshot).
 
 Validation happens AT CONSTRUCTION — an invalid combination is either
 rejected (``PlanError``) or auto-resolved with a ``PlanResolutionWarning``
@@ -91,6 +96,10 @@ admission thresholds (``shed_queue_depth`` /          drop them + warn (the
                                                       (silent normalization
                                                       — same contract the
                                                       engine always had)
+non-positive ``trace_capacity`` / ``sample_every``    reject
+``trace_capacity`` / ``sample_every != 1`` without    drop them + warn (they
+``trace=True``                                        parameterize the
+                                                      tracer only)
 ====================================================  =======================
 
 Round-trip: ``ServePlan.from_json(plan.to_json()) == plan``. Named presets
@@ -180,9 +189,20 @@ class CachePlan:
     #                                        max_cached_users (or 64)
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsPlan:
+    """Observability: request/group tracing + histogram metrics
+    (``repro.obs``)."""
+    trace: bool = False                # ring-buffer span/instant tracing
+    trace_capacity: int | None = None  # ring size; None = obs default
+    sample_every: int = 1              # trace every Nth request's events
+    metrics: bool = True               # latency/queue-wait histograms +
+    #                                    unified counter snapshot()
+
+
 _SECTIONS: dict[str, type] = {"graph": GraphPlan, "kernel": KernelPlan,
                               "batch": BatchPlan, "shard": ShardPlan,
-                              "cache": CachePlan}
+                              "cache": CachePlan, "obs": ObsPlan}
 
 # legacy ServingEngine kwarg -> (section, field). The shim in
 # ``ServingEngine.__init__`` routes deprecated keyword construction here.
@@ -232,6 +252,8 @@ _FIELD_TYPES: dict[str, dict[str, str]] = {
     "shard": {"shard_candidates": "bool_or_int", "compress_scores": "bool"},
     "cache": {"cache_user_reps": "bool", "max_cached_users": "int?",
               "device_resident": "bool", "device_slots": "int?"},
+    "obs": {"trace": "bool", "trace_capacity": "int?",
+            "sample_every": "int", "metrics": "bool"},
 }
 
 
@@ -269,6 +291,7 @@ class ServePlan:
     batch: BatchPlan = BatchPlan()
     shard: ShardPlan = ShardPlan()
     cache: CachePlan = CachePlan()
+    obs: ObsPlan = ObsPlan()
 
     # -- validation ---------------------------------------------------------
     def __post_init__(self):
@@ -292,8 +315,8 @@ class ServePlan:
                          f"{name}.{field} must be {kind.rstrip('?')}"
                          f"{' or None' if kind.endswith('?') else ''}, "
                          f"got {type(v).__name__} ({v!r})")
-        g, k, b, s, c = (self.graph, self.kernel, self.batch, self.shard,
-                         self.cache)
+        g, k, b, s, c, o = (self.graph, self.kernel, self.batch, self.shard,
+                            self.cache, self.obs)
 
         # hard errors: contradictions with no meaningful resolution
         _require(g.mode in MODES,
@@ -350,6 +373,11 @@ class ServePlan:
         _require(c.device_slots is None or c.device_slots >= 1,
                  f"device_slots must be >= 1 (or None to follow "
                  f"max_cached_users), got {c.device_slots}")
+        _require(o.trace_capacity is None or o.trace_capacity >= 1,
+                 f"trace_capacity must be >= 1 (or None for the obs "
+                 f"default), got {o.trace_capacity}")
+        _require(o.sample_every >= 1,
+                 f"sample_every must be >= 1, got {o.sample_every}")
 
         # auto-resolutions: drop the no-op knob and say why (the previously
         # SILENT combos of the pre-plan engine)
@@ -429,6 +457,20 @@ class ServePlan:
                                dataclasses.replace(self.cache,
                                                    device_slots=None))
             c = self.cache
+        trc_knobs = [n for n, v in
+                     (("trace_capacity", o.trace_capacity),
+                      ("sample_every",
+                       o.sample_every if o.sample_every != 1 else None))
+                     if v is not None]
+        if trc_knobs and not o.trace:
+            notes.append(
+                f"{'/'.join(trc_knobs)} without trace=True: they "
+                f"parameterize the ring-buffer tracer only — resolved to "
+                f"defaults (set trace=True to keep them)")
+            object.__setattr__(self, "obs",
+                               dataclasses.replace(self.obs,
+                                                   trace_capacity=None,
+                                                   sample_every=1))
         # silent normalization (the engine's long-standing contract): the
         # smallest bucket can never exceed the row budget
         if b.min_bucket > b.max_batch:

@@ -66,8 +66,14 @@ class StageProfiler:
             self._total_s[name] += seconds
             self._calls[name] += 1
 
-    def snapshot(self) -> dict[str, dict[str, float]]:
-        """Per-phase ``{total_ms, calls, mean_us}`` (zero-safe)."""
+    def snapshot(self, reset: bool = False) -> dict[str, dict[str, float]]:
+        """Per-phase ``{total_ms, calls, mean_us}`` (zero-safe).
+
+        ``reset=True`` zeroes the totals under the SAME lock acquisition
+        — the atomic read-and-clear bench loops need. A separate
+        ``snapshot(); reset()`` pair loses every phase event recorded
+        between the two calls (the batcher worker profiles concurrently),
+        silently shrinking the next window's denominator."""
         with self._lock:
             out = {}
             for p in PHASES:
@@ -78,6 +84,10 @@ class StageProfiler:
                     "calls": calls,
                     "mean_us": (total / calls * 1e6) if calls else 0.0,
                 }
+            if reset:
+                for p in PHASES:
+                    self._total_s[p] = 0.0
+                    self._calls[p] = 0
             return out
 
     def reset(self) -> None:

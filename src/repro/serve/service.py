@@ -205,6 +205,17 @@ class RankingService:
                     "stage1_calls": s.engine.stage1_calls,
                     "stage2_calls": s.engine.stage2_calls,
                     "pipeline_forks": s.engine.pipeline_forks,
+                    # log-bucketed distributions (repro.obs): the tail
+                    # numbers an SLO is judged on, which the cumulative
+                    # totals above cannot show
+                    "latency": {
+                        "request_ms": s.batcher.request_latency.snapshot(),
+                        "queue_wait_ms": s.batcher.queue_wait.snapshot(),
+                    },
+                    # unified counter+histogram snapshot when the
+                    # engine's registry is on (plan.obs.metrics)
+                    "metrics": (s.engine.metrics.snapshot()
+                                if s.engine.metrics is not None else None),
                     "profile": s.engine.profiler.snapshot(),
                     "device_store": (s.engine.device_store.stats()
                                      if s.engine.device_store is not None
