@@ -27,6 +27,15 @@ deadline class never shed at low load). ``--check`` additionally asserts
 the PR's acceptance: continuous p99 <= lockstep p99 at the fixed
 sub-saturation point and continuous saturation >= lockstep (within
 ``--tol`` measurement slack on this shared-CPU box).
+
+``--chaos`` switches the harness into the self-healing acceptance run:
+one scenario served under a deterministic fault schedule (device-tier
+write faults, stage-2 dispatch faults, injected result corruption, and
+one worker-thread kill), asserting that every submitted future resolves
+(zero hung), every SUCCESSFUL response is bit-identical to a fault-free
+reference, availability stays above ``--chaos-floor``, and the circuit
+breaker demonstrably restores the device-resident fast path
+(open -> ... -> closed, via ``RankingService.stats()`` counters).
 """
 from __future__ import annotations
 
@@ -365,6 +374,150 @@ def run_preset(svc, preset: str, wl: Workload, ring: np.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Chaos: deterministic fault schedule + self-healing acceptance
+# ---------------------------------------------------------------------------
+
+# Count-bounded (p=1) specs land on the same pokes every run: 3 of the 4
+# slot_write faults quarantine the device tier and open the breaker
+# (breaker_failures=3); dispatch faults and injected corruption exercise
+# the retry path mid-stream; one worker_loop fault kills the dispatch
+# thread once. Every count is finite, so the recovery phase always
+# reaches a clean half-open probe and the breaker closes.
+CHAOS_SITES = (
+    "slot_write:error:count=4",
+    "stage2_dispatch:error:after=10,count=3",
+    "collect:corrupt:after=6,count=2",
+    "worker_loop:error:after=4,count=1",
+)
+
+
+def build_chaos_plan(args):
+    from repro.serve import ServePlan
+    plan = ServePlan.preset("paper").evolve(
+        batch__max_batch=args.max_batch, batch__min_bucket=args.B,
+        batch__hedging=False, batch__linger_ms=args.linger_ms,
+        cache__device_resident=True, cache__device_slots=args.device_slots,
+        ft__inject=True, ft__seed=args.seed, ft__sites=CHAOS_SITES,
+        ft__retries=4, ft__retry_backoff_ms=2.0,
+        ft__breaker_failures=3, ft__breaker_cooldown_ms=150.0,
+        ft__breaker_probes=1)
+    if getattr(args, "trace", None):
+        plan = plan.evolve(obs__trace=True)
+    return plan
+
+
+def run_chaos(svc, graph, params, wl: Workload, args) -> dict:
+    """Drive one scenario under ``CHAOS_SITES`` and assert self-healing.
+
+    Contract (the PR's acceptance): zero hung futures, bit-identical
+    scores on every success vs a fault-free reference, availability above
+    the floor, and the breaker walking open -> half-open -> closed.
+    """
+    from repro.serve import SLO_DEADLINE
+    scen = "chaos"
+    plan = build_chaos_plan(args)
+    svc.register(scen, graph=graph, params=params, plan=plan)
+    eng = svc.engine(scen)
+    inj = eng.fault_injector
+    assert inj is not None and eng.breaker is not None, \
+        "chaos plan must arm the injector and the breaker"
+
+    # warmup + fault-free references with the injector DISARMED: disarmed
+    # pokes advance no counters, so compile-time traffic cannot consume
+    # the deterministic fault counts. Scores depend only on uid % pool
+    # (user feeds repeat across the universe), so one reference per pool
+    # slot covers every uid in the drive.
+    inj.set_armed(False)
+    warm(svc, scen, wl, args.max_batch)
+    pool = len(wl.ufeeds)
+    refs = [svc.score(scen, wl.req(slot)).scores.copy()
+            for slot in range(pool)]
+    inj.set_armed(True)
+
+    n_requests = 80
+    futs = []
+    for i in range(n_requests):
+        uid = i % (pool * 6)      # revisit users: rebuild-after-quarantine
+        dl = 1000.0 if i % 5 == 0 else None   # generous: never infeasible
+        futs.append((uid, svc.submit(
+            scen, wl.req(uid),
+            slo=SLO_DEADLINE if dl is not None else "best_effort",
+            deadline_ms=dl)))
+        time.sleep(0.004)         # spread arrivals across breaker windows
+
+    _wait_futures([f for _, f in futs], timeout=120.0)
+    hung = [i for i, (_, f) in enumerate(futs) if not f.done()]
+    assert not hung, f"hung futures (never resolved): {hung}"
+
+    ok = 0
+    failures: list[str] = []
+    for uid, f in futs:
+        if f.exception() is None:
+            res = f.result()
+            assert np.array_equal(res.scores, refs[uid % pool]), (
+                f"chaos: successful response for uid={uid} is NOT "
+                f"bit-identical to the fault-free reference")
+            ok += 1
+        else:
+            failures.append(type(f.exception()).__name__)
+    availability = ok / n_requests
+    assert availability >= args.chaos_floor, (
+        f"availability {availability:.3f} below floor {args.chaos_floor} "
+        f"(failures: {failures})")
+
+    # recovery: every fault count is exhausted by now (or exhausts on the
+    # next few probes), so after each cooldown the half-open probe scores
+    # a clean on-slots pack and the breaker closes — bounded rounds, no
+    # sleep-and-hope
+    for _ in range(10):
+        if eng.breaker.state == "closed":
+            break
+        time.sleep(plan.ft.breaker_cooldown_ms / 1e3 + 0.02)
+        svc.score(scen, wl.req(1))
+    st = svc.stats()["scenarios"][scen]
+    br = st["breaker"]
+    assert br["opens"] >= 1, f"breaker never opened: {br}"
+    assert br["closes"] >= 1 and br["state"] == "closed", (
+        f"breaker never restored the fast path: {br}")
+    assert st["device_store"]["quarantines"] >= 1, \
+        "device tier was never quarantined"
+    assert st["worker_crashes"] >= 1 and st["worker_respawns"] >= 1, (
+        f"worker supervision never exercised: crashes="
+        f"{st['worker_crashes']} respawns={st['worker_respawns']}")
+    assert st["fallback_packs"] >= 1, \
+        "breaker-open traffic never routed through the re-stack fallback"
+    assert st["retries_attempted"] >= 1, "no retry was ever attempted"
+    # fast path actually restored: a post-close request scores on slots
+    post = svc.score(scen, wl.req(2))
+    assert np.array_equal(post.scores, refs[2 % pool])
+    assert eng.breaker.state == "closed"
+
+    out = {
+        "requests": n_requests, "ok": ok,
+        "availability": round(availability, 4),
+        "failure_types": sorted(set(failures)),
+        "faults": st["faults"], "breaker": br,
+        "quarantines": st["device_store"]["quarantines"],
+        "worker_crashes": st["worker_crashes"],
+        "worker_respawns": st["worker_respawns"],
+        "fallback_packs": st["fallback_packs"],
+        "corruptions_detected": st["corruptions_detected"],
+        "retries_attempted": st["retries_attempted"],
+        "retries_exhausted": st["retries_exhausted"],
+        "plan": plan.to_dict(),
+    }
+    print(f"load/chaos,availability={availability:.3f},"
+          f"ok={ok}/{n_requests},"
+          f"faults={st['faults']['total_fired']},"
+          f"quarantines={out['quarantines']},"
+          f"breaker_opens={br['opens']},breaker_closes={br['closes']},"
+          f"respawns={out['worker_respawns']},"
+          f"retries={out['retries_attempted']}", flush=True)
+    print("# chaos asserts passed", flush=True)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Assertions
 # ---------------------------------------------------------------------------
 
@@ -430,6 +583,14 @@ def main() -> None:
     ap.add_argument("--check", action="store_true",
                     help="assert the continuous-vs-lockstep acceptance "
                          "criteria on this run")
+    ap.add_argument("--chaos", action="store_true",
+                    help="run the deterministic fault schedule instead of "
+                         "the load curves and assert self-healing (zero "
+                         "hung futures, bit-identical successes, breaker "
+                         "recovery)")
+    ap.add_argument("--chaos-floor", type=float, default=0.9,
+                    help="minimum fraction of chaos requests that must "
+                         "succeed")
     ap.add_argument("--json", metavar="PATH", default=None)
     ap.add_argument("--trace", metavar="PATH", default=None,
                     help="enable ObsPlan tracing on every variant and "
@@ -507,18 +668,22 @@ def main() -> None:
     results = {}
     plans = {}
     with RankingService() as svc:
-        for preset in presets:
-            for variant in ("continuous", "lockstep"):
-                plan = build_plan(preset, variant, args)
-                svc.register(f"{preset}:{variant}", graph=graph,
-                             params=params, plan=plan)
-                warm(svc, f"{preset}:{variant}", wl, args.max_batch)
-                if variant == "continuous":
-                    plans[preset] = plan.to_dict()
-        for preset in presets:
-            results[preset] = run_preset(svc, preset, wl, ring, args, rng)
-            results[preset]["preset"] = preset
-            results[preset]["plan"] = plans[preset]
+        if args.chaos:
+            results["chaos"] = run_chaos(svc, graph, params, wl, args)
+        else:
+            for preset in presets:
+                for variant in ("continuous", "lockstep"):
+                    plan = build_plan(preset, variant, args)
+                    svc.register(f"{preset}:{variant}", graph=graph,
+                                 params=params, plan=plan)
+                    warm(svc, f"{preset}:{variant}", wl, args.max_batch)
+                    if variant == "continuous":
+                        plans[preset] = plan.to_dict()
+            for preset in presets:
+                results[preset] = run_preset(svc, preset, wl, ring, args,
+                                             rng)
+                results[preset]["preset"] = preset
+                results[preset]["plan"] = plans[preset]
         if args.trace:
             from repro.obs import write_trace
             tracers = {sc: svc.engine(sc).tracer for sc in svc.scenarios
@@ -528,9 +693,9 @@ def main() -> None:
                   f"({sum(len(t) for t in tracers.values())} events)",
                   flush=True)
 
-    if args.smoke:
+    if args.smoke and not args.chaos:
         smoke_asserts(results)
-    if args.check:
+    if args.check and not args.chaos:
         check_asserts(results, args.tol)
 
     if args.json:

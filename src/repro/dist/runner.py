@@ -144,6 +144,21 @@ def run_worker(args) -> int:
     plan = (ServePlan.from_json(args.plan_json) if args.plan_json
             else build_plan(args))
     compress = plan.shard.compress_scores
+    # fault-tolerance surface (plan.ft): a per-worker FaultInjector whose
+    # ``spmd_heartbeat`` site simulates missed per-step heartbeats, fed to
+    # a HeartbeatMonitor on a step-counter clock (timeout ~1.5 steps: one
+    # missed beat degrades, two consecutive misses declare the worker
+    # dead) — the detection layer the elastic-remesh planner consumes.
+    injector = monitor = None
+    wid = f"w{topo.process_id}"
+    hb_step = [0]
+    hb_missed = 0
+    if plan.ft.inject and plan.ft.sites:
+        from repro.ft import FaultInjector, HeartbeatMonitor
+        injector = FaultInjector(plan.ft.sites,
+                                 seed=plan.ft.seed + topo.process_id)
+        monitor = HeartbeatMonitor([wid], timeout=1.5,
+                                   clock=lambda: float(hb_step[0]))
     records = []
     tracers = {}
     for mode in args.modes.split(","):
@@ -198,6 +213,18 @@ def run_worker(args) -> int:
             # the same taxonomy as the serve bench's breakdown rows, so
             # the dispatch path stays attributable per shard count
             rec["breakdown"] = eng.profiler.snapshot()
+        if monitor is not None:
+            from repro.serve.errors import FaultInjected
+            hb_step[0] += 1
+            try:
+                injector.poke("spmd_heartbeat", worker=wid, mode=mode)
+                monitor.heartbeat(wid)
+            except FaultInjected:
+                hb_missed += 1          # this step's beat never arrived
+            rec["heartbeat"] = {"worker": wid, "step": hb_step[0],
+                                "missed": hb_missed,
+                                "dead": monitor.dead()}
+            rec["faults"] = injector.stats()
         records.append(rec)
         if eng.tracer is not None:
             tracers[mode] = eng.tracer    # events outlive the engine

@@ -34,8 +34,19 @@ class HeartbeatMonitor:
         self.timeout = timeout
         self.clock = clock
         self.last_seen = {w: clock() for w in workers}
+        self._removed: set[str] = set()
 
     def heartbeat(self, worker: str) -> None:
+        # removal is sticky: a stray beat from a decommissioned worker
+        # (e.g. one the remesh already planned around) must not silently
+        # re-register it — rejoining goes through the explicit add()
+        if worker in self._removed:
+            return
+        self.last_seen[worker] = self.clock()
+
+    def add(self, worker: str) -> None:
+        """Explicitly (re-)register a worker, clearing sticky removal."""
+        self._removed.discard(worker)
         self.last_seen[worker] = self.clock()
 
     def dead(self) -> list[str]:
@@ -50,6 +61,7 @@ class HeartbeatMonitor:
 
     def remove(self, worker: str) -> None:
         self.last_seen.pop(worker, None)
+        self._removed.add(worker)
 
 
 @dataclasses.dataclass(frozen=True)

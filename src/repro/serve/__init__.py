@@ -41,6 +41,18 @@ grown into an async, multi-user subsystem:
 * ``service`` — ``RankingService``: multi-scenario router hosting several
   registry models behind one ``submit(scenario, request)`` API, with a
   shared rep-cache budget across scenario engines.
+* ``errors``  — the serving error taxonomy (``ServeError`` and its typed
+  subclasses), stdlib-only so fault specs and recovery policies import
+  without the JAX stack.
+
+Fault tolerance rides the plan spine as well (``FaultPlan``, the ``ft``
+section): deterministic fault injection at named sites
+(``repro.ft.FaultInjector``), per-request retries with
+deadline-budgeted backoff, a circuit breaker on stage-2 device-tier
+dispatch that routes packs through the bit-identical re-stacking
+fallback while open, device-tier quarantine on failed donated writes,
+and batcher worker supervision — see ``serve/README.md`` § Failure
+handling.
 
 Observability rides the plan spine too (``ObsPlan``): ``obs__trace=True``
 threads a ``repro.obs.Tracer`` through engine/batcher/cache (request and
@@ -51,11 +63,18 @@ p50/p99 request-latency and queue-wait histograms.
 from repro.serve.batcher import (  # noqa: F401
     SLO_BEST_EFFORT,
     SLO_DEADLINE,
-    AdmissionError,
-    BatcherClosedError,
     CoalescingBatcher,
 )
 from repro.serve.cache import DeviceRepStore, UserRepCache  # noqa: F401
+from repro.serve.errors import (  # noqa: F401
+    AdmissionError,
+    BatcherClosedError,
+    CircuitOpenError,
+    FaultInjected,
+    RetryExhausted,
+    ServeError,
+    WorkerCrashedError,
+)
 from repro.serve.engine import (  # noqa: F401
     ServeRequest,
     ServeResult,
@@ -67,6 +86,7 @@ from repro.serve.plan import (  # noqa: F401
     PRESETS,
     BatchPlan,
     CachePlan,
+    FaultPlan,
     GraphPlan,
     KernelPlan,
     ObsPlan,

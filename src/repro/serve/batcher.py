@@ -78,6 +78,25 @@ the worker starves queued best-effort requests for as long as the
 saturation lasts — that is the intended contract (``deadline_requests /
 requests`` is the counter to alarm on).
 
+**Self-healing** (``retries > 0``) — a group whose launch or collect
+fails with a retryable error does not fail its waiters outright: each
+member is retried individually (``engine.score_coalesced([req])``) with
+exponential backoff + jitter, every attempt bounded by the request's
+remaining deadline budget — a retry whose backoff would overrun the
+deadline stops immediately and the future resolves with a typed
+``RetryExhausted`` carrying the last error as ``__cause__``. Typed
+refusals (``AdmissionError``, ``BatcherClosedError``) are never retried.
+
+**Worker supervision** — the dispatch loop runs under a supervisor on
+the worker thread: an escaped exception (e.g. an injected
+``worker_loop`` fault) is a *worker crash*, not a hang. The supervisor
+fails-or-retries every request the crashed loop was holding (the group
+being formed), collects every in-flight group, and restarts the
+dispatch loop on the same thread (``worker_crashes`` /
+``worker_respawns`` count the events). An admitted future therefore
+always resolves — with a result, a typed error, or a retry outcome —
+and ``close()`` semantics are unchanged.
+
 ``close()`` drains: every admitted request still queued is scored (with
 zero linger) and every in-flight group collected before the worker exits,
 so no accepted future is ever abandoned. Anything left after a worker
@@ -88,33 +107,29 @@ from __future__ import annotations
 import dataclasses
 import math
 import queue
+import random
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future
 from typing import Sequence
 
+from repro.ft.recovery import RetryPolicy
 from repro.obs.metrics import MetricsRegistry
+# The error taxonomy lives in repro.serve.errors; AdmissionError and
+# BatcherClosedError were defined here historically and are re-exported
+# for back-compat (`from repro.serve.batcher import AdmissionError`).
+from repro.serve.errors import (  # noqa: F401
+    AdmissionError,
+    BatcherClosedError,
+    RetryExhausted,
+    WorkerCrashedError,
+)
 from repro.serve.engine import ServeRequest, ServeResult, ServingEngine
 
 SLO_BEST_EFFORT = "best_effort"
 SLO_DEADLINE = "deadline"
 _PRIO = {SLO_DEADLINE: 0, SLO_BEST_EFFORT: 1}
-
-
-class AdmissionError(RuntimeError):
-    """A request shed by admission control — failed fast at submit, never
-    queued. ``slo`` and ``queue_depth`` carry the shed context."""
-
-    def __init__(self, msg: str, *, slo: str | None = None,
-                 queue_depth: int | None = None):
-        super().__init__(msg)
-        self.slo = slo
-        self.queue_depth = queue_depth
-
-
-class BatcherClosedError(RuntimeError):
-    """The batcher shut down before this request could be scored."""
 
 
 @dataclasses.dataclass(order=True)
@@ -139,7 +154,11 @@ class CoalescingBatcher:
                  shed_queue_depth: int | None = None,
                  degrade_queue_depth: int | None = None,
                  degrade_frac: float = 0.5,
-                 deadline_headroom_ms: float = 0.0):
+                 deadline_headroom_ms: float = 0.0,
+                 retries: int = 0,
+                 retry_backoff_ms: float = 1.0,
+                 retry_jitter: float = 0.5,
+                 retry_seed: int = 0):
         if getattr(engine, "_multiproc", False):
             # same hazard class as hedging under SPMD: each process's
             # batcher thread would form groups from its own wall-clock
@@ -164,11 +183,24 @@ class CoalescingBatcher:
         self.degrade_queue_depth = degrade_queue_depth
         self.degrade_frac = degrade_frac
         self.deadline_headroom_ms = deadline_headroom_ms
+        self.retries = retries
+        self._retry_policy = RetryPolicy(retries=retries,
+                                         backoff_ms=retry_backoff_ms,
+                                         jitter=retry_jitter)
+        self._retry_rng = random.Random(retry_seed)
+        # the engine's fault injector (None in production): the batcher
+        # owns exactly one site — worker_loop, poked at group formation —
+        # so chaos schedules can kill the dispatch loop deterministically
+        self._injector = getattr(engine, "fault_injector", None)
         self._q: queue.PriorityQueue = queue.PriorityQueue()
         self._seq = 0
         self._stop = threading.Event()
         self._lock = threading.Lock()     # serializes submit vs close
         self._worker: threading.Thread | None = None
+        # worker-loop state held at instance level so the crash supervisor
+        # can see exactly what the dispatch loop was holding when it died
+        self._inflight: deque = deque()   # (claimed items, handle), FIFO
+        self._forming: list = []          # dequeued, not yet launched
         self._queued = 0              # admitted, not yet claimed by the worker
         self.batches = 0              # engine handoffs
         self.coalesced_requests = 0   # requests scored in a >1-request group
@@ -178,6 +210,10 @@ class CoalescingBatcher:
         self.shed_best_effort = 0     # ... of the best_effort class
         self.shed_deadline = 0        # ... of the deadline class (infeasible)
         self.degraded_requests = 0    # admitted with a truncated pool
+        self.retries_attempted = 0    # individual re-scores after a failure
+        self.retries_exhausted = 0    # requests failed after all retries
+        self.worker_crashes = 0       # dispatch-loop escapes caught
+        self.worker_respawns = 0      # dispatch-loop restarts (same thread)
         # observability (repro.obs): the engine's tracer (None when
         # plan.obs.trace is off) and metrics registry. Queue wait and
         # request latency are recorded as log-bucketed histograms —
@@ -194,7 +230,9 @@ class CoalescingBatcher:
         for name in ("requests", "batches", "coalesced_requests",
                      "deadline_requests", "shed_requests",
                      "shed_best_effort", "shed_deadline",
-                     "degraded_requests"):
+                     "degraded_requests", "retries_attempted",
+                     "retries_exhausted", "worker_crashes",
+                     "worker_respawns"):
             self.metrics.gauge(name, lambda n=name: getattr(self, n))
         if auto_start:
             self.start()
@@ -208,10 +246,18 @@ class CoalescingBatcher:
         return self.queue_wait.total
 
     @classmethod
-    def from_plan(cls, engine: ServingEngine, batch,
+    def from_plan(cls, engine: ServingEngine, batch, ft=None,
                   *, auto_start: bool = True) -> "CoalescingBatcher":
         """Build a batcher from a ``BatchPlan`` (the ``ServePlan`` spine's
-        batch section) — the one wiring every entry point shares."""
+        batch section) — the one wiring every entry point shares. The
+        optional ``ft`` (the plan's ``FaultPlan`` section) carries the
+        retry knobs; omitted, retries are off."""
+        kw: dict = {}
+        if ft is not None:
+            kw = dict(retries=ft.retries,
+                      retry_backoff_ms=ft.retry_backoff_ms,
+                      retry_jitter=ft.retry_jitter,
+                      retry_seed=ft.seed)
         return cls(engine, linger_ms=batch.linger_ms,
                    max_coalesce=batch.max_coalesce,
                    deadline_linger_frac=batch.deadline_linger_frac,
@@ -222,7 +268,7 @@ class CoalescingBatcher:
                    degrade_queue_depth=batch.degrade_queue_depth,
                    degrade_frac=batch.degrade_frac,
                    deadline_headroom_ms=batch.deadline_headroom_ms,
-                   auto_start=auto_start)
+                   auto_start=auto_start, **kw)
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -390,6 +436,51 @@ class CoalescingBatcher:
         return now + self.linger_ms / 1e3
 
     def _run(self) -> None:
+        """Worker-thread entry: a supervisor around the dispatch loop.
+
+        An exception escaping ``_run_loop`` is a *worker crash*. The
+        supervisor resolves everything the dead loop was holding — the
+        group being formed is failed-or-retried with a typed
+        ``WorkerCrashedError``, every in-flight group is collected — then
+        restarts the dispatch loop on this same thread. No admitted
+        future ever rides a dead loop.
+        """
+        stop_crashes = 0
+        while True:
+            try:
+                self._run_loop()
+                return                # clean exit: stop set, queue drained
+            except BaseException as e:
+                self.worker_crashes += 1
+                if self.tracer is not None:
+                    self.tracer.instant("worker_crash",
+                                        error=type(e).__name__)
+                self._on_worker_crash(e)
+                if self._stop.is_set():
+                    # crash-looping during drain: give up after a few
+                    # restarts — close()'s backstop fails the remainder
+                    # with a typed BatcherClosedError (typed, not hung)
+                    stop_crashes += 1
+                    if stop_crashes >= 3:
+                        return
+                self.worker_respawns += 1
+                if self.tracer is not None:
+                    self.tracer.instant("worker_respawn",
+                                        respawns=self.worker_respawns)
+
+    def _on_worker_crash(self, exc: BaseException) -> None:
+        """Resolve everything the dead dispatch loop was holding."""
+        forming, self._forming = self._forming, []
+        if forming:
+            err = WorkerCrashedError(
+                f"batcher worker crashed during group formation: "
+                f"{type(exc).__name__}: {exc}")
+            err.__cause__ = exc
+            self._fail_or_retry(forming, err)
+        while self._inflight:
+            self._collect_one(self._inflight)
+
+    def _run_loop(self) -> None:
         """The dispatch loop.
 
         Continuous mode keeps up to ``max_inflight`` launched groups
@@ -406,7 +497,7 @@ class CoalescingBatcher:
         scored with zero linger and all in-flight groups collected before
         the thread exits — an admitted future is never abandoned.
         """
-        inflight: deque = deque()     # (claimed items, engine handle), FIFO
+        inflight = self._inflight     # (claimed items, engine handle), FIFO
         continuous = (self.continuous
                       and hasattr(self.engine, "begin_coalesced"))
         prof = getattr(self.engine, "profiler", None)
@@ -439,7 +530,12 @@ class CoalescingBatcher:
             if item.req is None:      # wake marker (close() or stale)
                 continue
             group = self._form_group(item, inflight)
-            self._launch_group(group, inflight, continuous, prof)
+            try:
+                self._launch_group(group, inflight, continuous, prof)
+            finally:
+                # launched (or resolved): the crash supervisor no longer
+                # owns these items
+                self._forming = []
             while len(inflight) >= self.max_inflight:
                 self._collect_one(inflight)
             self._harvest(inflight)
@@ -447,7 +543,11 @@ class CoalescingBatcher:
     def _form_group(self, item: _Item, inflight: deque) -> list[_Item]:
         with self._lock:
             self._queued -= 1
-        group = [item]
+        # crash-visible formation state: if the loop dies past this line,
+        # the supervisor owns every item in the list and resolves it
+        group = self._forming = [item]
+        if self._injector is not None:
+            self._injector.poke("worker_loop", req=item.seq)
         rows = self._candidate_rows(item.req)
         # draining after close(): no linger — ship everything, fast
         deadline = (time.perf_counter() if self._stop.is_set()
@@ -507,7 +607,7 @@ class CoalescingBatcher:
             try:
                 results = self.engine.score_coalesced(reqs)
             except BaseException as e:      # propagate to every waiter
-                self._fail(claimed, e)
+                self._fail_or_retry(claimed, e)
                 return
             self._resolve(claimed, results)
             return
@@ -516,7 +616,7 @@ class CoalescingBatcher:
         try:
             handle = self.engine.begin_coalesced(reqs)
         except BaseException as e:
-            self._fail(claimed, e)
+            self._fail_or_retry(claimed, e)
             return
         if trc is not None:
             # request -> group linkage: each member seq joins the engine
@@ -544,15 +644,80 @@ class CoalescingBatcher:
         try:
             results = self.engine.collect(handle)
         except BaseException as e:
-            self._fail(claimed, e)
+            self._fail_or_retry(claimed, e)
             return
         self._resolve(claimed, results)
 
-    @staticmethod
-    def _fail(claimed: list[_Item], exc: BaseException) -> None:
-        for it in claimed:
-            if not it.fut.done():
+    # -- failure resolution and retry ---------------------------------------
+    def _fail_or_retry(self, items: list[_Item],
+                       exc: BaseException) -> None:
+        """Resolve each item after a failure: typed refusals (and
+        already-exhausted retries) fail the future immediately; anything
+        else is re-scored per request when retries are configured. Every
+        future resolves one way or the other — none hang."""
+        retryable = (self.retries > 0
+                     and not isinstance(exc, (AdmissionError,
+                                              BatcherClosedError,
+                                              RetryExhausted)))
+        for it in items:
+            if it.fut.done():
+                continue
+            if (not it.fut.running()
+                    and not it.fut.set_running_or_notify_cancel()):
+                continue          # cancelled while queued / forming
+            if not retryable:
                 it.fut.set_exception(exc)
+                continue
+            self._retry_one(it, exc)
+
+    def _retry_one(self, it: _Item, first_exc: BaseException) -> None:
+        """Re-score one request with exponential backoff + jitter, every
+        attempt bounded by the request's remaining deadline budget — a
+        backoff that would overrun the deadline stops the retry loop.
+        Resolves the future with a result or a typed ``RetryExhausted``
+        carrying the last error as ``__cause__``."""
+        trc = self.tracer
+        last = first_exc
+        attempts = 0
+        for attempt in range(self.retries):
+            delay_s = self._retry_policy.backoff_s(attempt,
+                                                   rng=self._retry_rng)
+            if (it.deadline_at is not None
+                    and it.deadline_at - time.perf_counter() <= delay_s):
+                break             # remaining budget cannot cover the wait
+            if delay_s > 0:
+                time.sleep(delay_s)
+            attempts += 1
+            self.retries_attempted += 1
+            if trc is not None:
+                trc.instant("retry", req=it.seq, attempt=attempts,
+                            error=type(last).__name__)
+            try:
+                res = self.engine.score_coalesced([it.req])[0]
+            except (AdmissionError, BatcherClosedError) as e:
+                last = e
+                break             # typed refusal: retrying cannot help
+            except BaseException as e:
+                last = e
+                continue
+            if it.degraded:
+                res.degraded = True
+            if it.submitted_at is not None:
+                self.request_latency.record(
+                    (time.perf_counter() - it.submitted_at) * 1e3)
+            if trc is not None and trc.sampled(it.seq):
+                trc.instant("resolve", req=it.seq, retried=attempts)
+            it.fut.set_result(res)
+            return
+        self.retries_exhausted += 1
+        if trc is not None:
+            trc.instant("retry_exhausted", req=it.seq, attempts=attempts,
+                        error=type(last).__name__)
+        err = RetryExhausted(
+            f"request failed after {attempts} retry attempt(s): "
+            f"{type(last).__name__}: {last}", attempts=attempts)
+        err.__cause__ = last
+        it.fut.set_exception(err)
 
     def _resolve(self, claimed: list[_Item], results) -> None:
         self.batches += 1

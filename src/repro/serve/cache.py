@@ -232,13 +232,25 @@ class DeviceRepStore:
         self.overflows = 0   # ensure_rows rows that could not get a slot
         self.forks = 0       # copy-on-write generation forks (writes armed
         #                      by fork_next_write under in-flight launches)
+        self.quarantines = 0  # generation invalidations (failed write/fork)
         self._tracer = None  # repro.obs.Tracer, when tracing
+        self._injector = None  # repro.ft.FaultInjector, when injecting
 
     def set_tracer(self, tracer) -> None:
         """Attach a ``repro.obs.Tracer`` for slot-lifecycle instants
         (``slot_steal`` / ``table_fork`` / ``slot_drop``). Emitted under
         the store lock — the tracer's lock is a leaf, so that is safe."""
         self._tracer = tracer
+
+    def set_fault_injector(self, injector) -> None:
+        """Attach a ``repro.ft.FaultInjector``: row writes poke the
+        ``slot_write`` site (plus ``table_fork`` when a copy-on-write
+        fork is armed). An injected error rides the existing failed-write
+        path (the claimed slot is returned, the exception propagates to
+        the engine, which quarantines the generation); the ``corrupt``
+        sentinel NaN-poisons the written row so detection happens at
+        collect, never at serve."""
+        self._injector = injector
 
     # -- allocation ---------------------------------------------------------
     def _alloc(self, row: Mapping[str, Any]) -> None:
@@ -313,6 +325,23 @@ class DeviceRepStore:
                         slots.append(None)
                         continue
                 try:
+                    if self._injector is not None:
+                        act = self._injector.poke("slot_write", user=user,
+                                                  slot=slot)
+                        if self._fork_pending:
+                            act = (self._injector.poke("table_fork",
+                                                       user=user, slot=slot)
+                                   or act)
+                        if act == "corrupt":
+                            # detectable corruption: NaN-poison the row
+                            # being written — it propagates to any score
+                            # gathered from this slot and is caught at
+                            # collect (clean reps stay in the host LRU,
+                            # so the post-quarantine rebuild is clean)
+                            reps = {k: np.full_like(np.asarray(v), np.nan)
+                                    if np.issubdtype(np.asarray(v).dtype,
+                                                     np.floating)
+                                    else v for k, v in reps.items()}
                     if self._tables is None:
                         self._alloc(reps)
                     if self._fork_pending:
@@ -374,6 +403,28 @@ class DeviceRepStore:
             entry = self._map.get(user)
             return None if entry is None else entry[1]
 
+    def quarantine(self, reason: str = "") -> None:
+        """Invalidate the current table generation wholesale.
+
+        A failed donated write or fork leaves no guarantee about the
+        generation's contents (the writer may have consumed the previous
+        buffer before failing), so nothing in it may ever be served
+        again: the slot map clears, every slot returns to the free list,
+        and the tables drop — they rebuild lazily from the host LRU on
+        the next ``ensure_rows`` (one row write per user, exactly like a
+        cold start). The host tier is untouched: quarantine costs
+        re-WRITES, never re-COMPUTES. Any in-flight executable keeps the
+        generation it was handed alive via its own reference, so this is
+        safe under the continuous loop."""
+        with self._lock:
+            self._map.clear()
+            self._free = list(range(self.capacity - 1, -1, -1))
+            self._tables = None
+            self._fork_pending = False
+            self.quarantines += 1
+            if self._tracer is not None:
+                self._tracer.instant("quarantine", reason=reason[:120])
+
     def fork_next_write(self) -> None:
         """Arm copy-on-write for the NEXT row write: instead of donating
         the current table generation in place, it builds a fresh one and
@@ -430,6 +481,7 @@ class DeviceRepStore:
                 "drops": self.drops,
                 "overflows": self.overflows,
                 "forks": self.forks,
+                "quarantines": self.quarantines,
                 "bytes": sum(boundary.values()),
                 "boundary_bytes": boundary,
             }

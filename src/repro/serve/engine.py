@@ -117,11 +117,14 @@ import numpy as np
 from repro.common import next_pow2 as _next_pow2, prev_pow2
 from repro.core.mari import mari_rewrite, convert_params
 from repro.core.split import split_two_stage
+from repro.ft.faults import CORRUPT, FaultInjector
+from repro.ft.recovery import CircuitBreaker
 from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import DEFAULT_CAPACITY, Tracer
 from repro.serve.cache import DeviceRepStore, UserRepCache
+from repro.serve.errors import FaultInjected
 from repro.serve.hedging import HedgedRunner, HedgePolicy
 from repro.serve.plan import ServePlan
 from repro.serve.profile import StageProfiler
@@ -197,6 +200,9 @@ class _InFlight:
     gid: int = 0                  # engine-wide group id (trace context)
     track: str | None = None      # synthetic trace track while outstanding
     slot: int = -1                # track slot, freed at collect
+    slots_mask: list = dataclasses.field(default_factory=list)
+    #                               per pack: True = device-slot fast path
+    #                               (breaker outcome accounting at collect)
 
 
 class ServingEngine:
@@ -498,6 +504,69 @@ class ServingEngine:
         self._hedged = (HedgedRunner(self._dispatch, self.hedge_policy)
                         if hedging else None)
 
+        # -- fault tolerance (plan.ft): deterministic injection + the
+        # stage-2 circuit breaker + device-tier quarantine. Off by default:
+        # the hot path pays one `injector is None` check per site. --
+        ftp = plan.ft
+        self.fault_injector: FaultInjector | None = None
+        if ftp.inject and ftp.sites:
+            self.fault_injector = FaultInjector(
+                ftp.sites, seed=ftp.seed, tracer=self.tracer)
+            if self._device_store is not None:
+                self._device_store.set_fault_injector(self.fault_injector)
+        self.breaker: CircuitBreaker | None = None
+        if ftp.breaker_failures > 0 and self._device_store is not None:
+            self.breaker = CircuitBreaker(
+                failures=ftp.breaker_failures,
+                cooldown_ms=ftp.breaker_cooldown_ms,
+                probes=ftp.breaker_probes,
+                on_transition=self._on_breaker_transition)
+        self.fallback_packs = 0       # packs the open breaker re-routed
+        self.corruptions_detected = 0  # NaN-poisoned scores caught at collect
+        if self.metrics is not None:
+            for name, fn in (
+                    ("faults_injected",
+                     lambda: (self.fault_injector.total_fired
+                              if self.fault_injector is not None else 0)),
+                    ("breaker_opens",
+                     lambda: (self.breaker.opens
+                              if self.breaker is not None else 0)),
+                    ("breaker_closes",
+                     lambda: (self.breaker.closes
+                              if self.breaker is not None else 0)),
+                    ("breaker_fallback_packs", lambda: self.fallback_packs),
+                    ("corruptions_detected",
+                     lambda: self.corruptions_detected),
+                    ("quarantines",
+                     lambda: (self._device_store.quarantines
+                              if self._device_store is not None else 0))):
+                self.metrics.gauge(name, fn)
+
+    def _on_breaker_transition(self, old: str, new: str) -> None:
+        trc = self.tracer
+        if trc is not None:
+            trc.instant({"open": "breaker_open",
+                         "half_open": "breaker_half_open",
+                         "closed": "breaker_close"}[new], previous=old)
+
+    def _poke(self, site: str, **ctx):
+        """Fault-injection hook: no-op unless the plan armed an injector."""
+        inj = self.fault_injector
+        if inj is None:
+            return None
+        return inj.poke(site, **ctx)
+
+    def _quarantine_device_tier(self, reason: str) -> None:
+        """A failed donated write/fork (or detected corruption) poisons
+        the current table generation: invalidate it wholesale — the slot
+        map clears, slots recycle, tables rebuild lazily from the host
+        LRU on the next resolve — so a stale row is never served. Counts
+        as one device-tier failure toward the breaker."""
+        if self._device_store is not None:
+            self._device_store.quarantine(reason=reason)
+        if self.breaker is not None:
+            self.breaker.record_failure()
+
     # -- build-time compilation helpers -------------------------------------
     @staticmethod
     def _globalize(x, sharding):
@@ -632,6 +701,7 @@ class ServingEngine:
             if reps is not None:
                 return reps, True, 0.0
         if self.two_stage:
+            self._poke("stage1", user=req.user_id)
             t0 = time.perf_counter()
             feeds = {k: v for k, v in req.user_feeds.items()
                      if k in self._stage1_inputs}
@@ -817,7 +887,8 @@ class ServingEngine:
                 with prof.phase("pack"):
                     prep = self._prepare_pack(pack_items, slot_reps, ds)
                 t_ds = time.perf_counter()
-                launched.append(self._launch_pack(prep))
+                launched.append(self._launch_pack(prep,
+                                                  on_slots=ds is not None))
                 if trc is not None:
                     total = sum(n for _, _, _, n in pack_items)
                     bucket = int(prep[1].shape[0])     # uidx rows
@@ -839,7 +910,8 @@ class ServingEngine:
 
         handle = _InFlight(reqs=reqs, infos=infos, packs=packs,
                            launched=launched, t0=t0, gid=gid,
-                           track=g_track, slot=g_slot)
+                           track=g_track, slot=g_slot,
+                           slots_mask=[ds is not None for ds in dslots])
         self._inflight.append(handle)
         if trc is not None:
             trc.complete("begin_coalesced", t0, time.perf_counter() - t0,
@@ -877,7 +949,6 @@ class ServingEngine:
         launches, materialize scores to host, and slice per-request
         results. Handles may be collected in any order; each exactly
         once."""
-        prof = self.profiler
         trc = self.tracer
         t0c = time.perf_counter()
         try:
@@ -886,23 +957,65 @@ class ServingEngine:
             raise RuntimeError(
                 "collect() on a handle that is not in flight (already "
                 "collected, or from another engine)") from None
+        try:
+            return self._collect_body(handle, t0c)
+        except BaseException:
+            # a mid-sweep failure (injected fault, detected corruption)
+            # must not leave untracked launches behind, and the group
+            # trace span must close so traces stay B/E-balanced
+            for out, _, blocked in handle.launched:
+                if not blocked:
+                    jax.block_until_ready(out)
+            if trc is not None and handle.track is not None:
+                trc.end("group", track=handle.track, group=handle.gid,
+                        error=True)
+                self._group_slots.discard(handle.slot)
+            raise
+
+    def _collect_body(self, handle: _InFlight, t0c: float
+                      ) -> list[ServeResult]:
+        prof = self.profiler
+        trc = self.tracer
         reqs, infos, packs, launched = (handle.reqs, handle.infos,
                                         handle.packs, handle.launched)
+        slots_mask = handle.slots_mask or [False] * len(packs)
+        detect = self.fault_injector is not None
 
         # collect sweep: block on device, materialize, slice per request
         per_req_scores: list[list[np.ndarray]] = [[] for _ in reqs]
         per_req_packs = [0] * len(reqs)
         per_req_hedged = [0] * len(reqs)
-        for (pack_items, _, _), (out, hedged, blocked) in zip(packs,
-                                                              launched):
+        for (pack_items, _, _), (out, hedged, blocked), on_slots in zip(
+                packs, launched, slots_mask):
             total = sum(n for _, _, _, n in pack_items)
             if not blocked:
                 with prof.phase("device"):
                     jax.block_until_ready(out)
+            act = self._poke("collect", group=handle.gid)
             with prof.phase("unpack"):
                 scores = np.concatenate(
                     [np.asarray(out[o]) for o in self.outputs],
                     axis=-1)[:total]
+            if act is CORRUPT:
+                scores = np.full_like(scores, np.nan)
+            if detect and not np.isfinite(scores).all():
+                # corruption detection: NaN-poisoned payloads (injected
+                # at transfer_copy / slot_write / collect) surface here —
+                # the corrupted response is failed typed, never served
+                self.corruptions_detected += 1
+                if trc is not None:
+                    trc.instant("corruption_detected", group=handle.gid,
+                                path="slots" if on_slots else "restack")
+                if on_slots:
+                    # the device tier may hold the poisoned row: wipe the
+                    # generation so a retry rebuilds from the host LRU
+                    self._quarantine_device_tier(
+                        "corrupted scores detected at collect")
+                raise FaultInjected(
+                    "corrupted stage-2 scores detected at collect",
+                    site="collect")
+            if on_slots and self.breaker is not None:
+                self.breaker.record_success()
             touched = set()
             offset = 0
             for ri, _, _, n in pack_items:
@@ -950,6 +1063,15 @@ class ServingEngine:
         earlier (already prepared) pack still references."""
         if self._device_store is None:
             return [None] * len(packs)
+        if self.breaker is not None and not self.breaker.allow():
+            # breaker open: route every pack through the bit-identical
+            # re-stacking fallback instead of touching the device tier;
+            # after the cooldown, allow() itself flips to half-open and
+            # lets probe traffic back onto the fast path
+            self.fallback_packs += len(packs)
+            if self.tracer is not None:
+                self.tracer.instant("breaker_fallback", packs=len(packs))
+            return [None] * len(packs)
         ver_of: dict = {}
         conflicted = set()
         for _, _, slot_keys in packs:
@@ -969,11 +1091,27 @@ class ServingEngine:
             per_pack.append(triples)
             protect.extend(u for u, _, _ in triples)
         out = []
+        poisoned = False
         for triples in per_pack:
-            if triples is None:
+            if triples is None or poisoned:
                 out.append(None)
                 continue
-            slots = self._device_store.ensure_rows(triples, protect=protect)
+            try:
+                slots = self._device_store.ensure_rows(triples,
+                                                       protect=protect)
+            except Exception as e:
+                # a failed donated write/fork may have left the current
+                # table generation inconsistent: quarantine it (slots
+                # recycle, tables rebuild lazily from the host LRU) and
+                # route this call's remaining packs through the
+                # re-stacking fallback — the request still succeeds,
+                # bit-identically, while the breaker accumulates the
+                # failure
+                self._quarantine_device_tier(
+                    f"ensure_rows failed: {type(e).__name__}: {e}")
+                poisoned = True
+                out.append(None)
+                continue
             out.append(slots if all(s is not None for s in slots) else None)
         return out
 
@@ -991,6 +1129,7 @@ class ServingEngine:
         stream, behind every in-flight executable, so a shared buffer
         refilled by a later pack races the pending copy (see the transfer
         comment below)."""
+        self._poke("pack")
         total = sum(n for _, _, _, n in pack_items)
         bucket = self._bucket(total)
         n_slots = len(slot_reps)
@@ -1044,6 +1183,14 @@ class ServingEngine:
         # continuous loop, silently swapping candidate rows between
         # overlapped groups (caught by the bit-identity suite). One
         # buffer allocation per pack is the price of the async dispatch.
+        if self._poke("transfer_copy") is CORRUPT:
+            # detectable-corruption sentinel: NaN-poison the float
+            # candidate buffers — NaN propagates through the stage-2
+            # matmuls into the scores and is caught at collect, so a
+            # corrupted transfer is never silently served
+            for buf in cand_bufs.values():
+                if np.issubdtype(buf.dtype, np.floating):
+                    buf.fill(np.nan)
         if self._multiproc:
             # SPMD: every process holds the identical host values; lift
             # them onto the cross-process mesh (replicated tables, sharded
@@ -1064,23 +1211,37 @@ class ServingEngine:
         return table, uidx_arr, cand, n_slots, first_shape
 
     # -- dispatch ------------------------------------------------------------
-    def _launch_pack(self, prep) -> tuple[dict, int, bool]:
+    def _launch_pack(self, prep, on_slots: bool = False
+                     ) -> tuple[dict, int, bool]:
         """Launch one prepared pack. Returns (outputs, hedged count,
         blocked) — ``blocked`` marks results already materialized (the
         hedging path owns its own latency observation and must see final
-        latencies, so it stays blocking)."""
+        latencies, so it stays blocking). ``on_slots`` marks the
+        device-resident fast path: a failed launch there counts toward
+        the circuit breaker."""
         table, uidx_arr, cand, n_slots, first_shape = prep
         self.stage2_calls += 1
         if n_slots > 1:
             self.coalesced_calls += 1
         prof = self.profiler
+        try:
+            self._poke("stage2_dispatch")
+        except Exception:
+            if on_slots and self.breaker is not None:
+                self.breaker.record_failure()
+            raise
         if self._hedged is not None and not first_shape:
             with prof.phase("dispatch"):
                 out, outcome = self._hedged.run(
                     self._params_s2, table, uidx_arr, cand)
             return out, int(outcome.hedged), True
         with prof.phase("dispatch"):
-            out = self._execute(self._params_s2, table, uidx_arr, cand)
+            try:
+                out = self._execute(self._params_s2, table, uidx_arr, cand)
+            except Exception:
+                if on_slots and self.breaker is not None:
+                    self.breaker.record_failure()
+                raise
         if self._hedged is not None:
             # compile call of a hedging engine: block here (latency would
             # poison the policy window, so it is not observed either)

@@ -30,7 +30,16 @@ Sections (each its own frozen dataclass):
   request/group tracing, off by default), ``trace_capacity``,
   ``sample_every`` (per-request event thinning), ``metrics``
   (log-bucketed latency/queue-wait histograms + unified counter
-  snapshot).
+  snapshot);
+* ``FaultPlan``  — fault tolerance (``repro.ft``, section key ``ft``):
+  ``inject`` + ``seed`` + ``sites`` (deterministic fault injection,
+  off by default — each site spec is ``site:kind[:k=v,...]``, see
+  ``repro.ft.faults``), ``retries`` / ``retry_backoff_ms`` /
+  ``retry_jitter`` (per-request retry with exponential backoff bounded
+  by the remaining deadline budget), ``breaker_failures`` /
+  ``breaker_cooldown_ms`` / ``breaker_probes`` (circuit breaker on the
+  stage-2 device-resident fast path; open routes packs through the
+  bit-identical re-stacking fallback).
 
 Validation happens AT CONSTRUCTION — an invalid combination is either
 rejected (``PlanError``) or auto-resolved with a ``PlanResolutionWarning``
@@ -100,6 +109,29 @@ non-positive ``trace_capacity`` / ``sample_every``    reject
 ``trace_capacity`` / ``sample_every != 1`` without    drop them + warn (they
 ``trace=True``                                        parameterize the
                                                       tracer only)
+malformed ``ft.sites`` spec (unknown site/kind/       reject — a typo'd
+param, bad value)                                     chaos schedule must
+                                                      fail at construction,
+                                                      not mid-run
+negative ``ft.retries`` / ``ft.retry_backoff_ms``     reject
+/ ``ft.breaker_failures`` /
+``ft.breaker_cooldown_ms``; ``ft.retry_jitter``
+outside [0, 1]; ``ft.breaker_probes < 1``
+``ft.sites`` / ``ft.seed`` without                    drop them + warn (the
+``ft.inject=True``                                    injector only arms
+                                                      when inject is on)
+``ft.retry_backoff_ms`` / ``ft.retry_jitter``         drop them + warn (they
+(non-default) without ``ft.retries > 0``              shape the retry
+                                                      schedule only)
+``ft.breaker_failures > 0`` without                   drop breaker + warn —
+``cache.device_resident``                             the breaker guards the
+                                                      device-resident fast
+                                                      path; with no device
+                                                      tier every pack
+                                                      already re-stacks
+``ft.breaker_cooldown_ms`` / ``ft.breaker_probes``    drop them + warn (they
+(non-default) without ``ft.breaker_failures > 0``     parameterize the
+                                                      breaker only)
 ====================================================  =======================
 
 Round-trip: ``ServePlan.from_json(plan.to_json()) == plan``. Named presets
@@ -120,6 +152,8 @@ import dataclasses
 import json
 import warnings
 from typing import Any, Mapping
+
+from repro.ft.faults import parse_fault_spec
 
 MODES = ("vani", "uoi", "mari")
 
@@ -200,9 +234,26 @@ class ObsPlan:
     #                                    unified counter snapshot()
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Fault tolerance: deterministic injection + self-healing recovery
+    (``repro.ft``)."""
+    inject: bool = False               # arm the fault injector
+    seed: int = 0                      # per-site deterministic RNG seed
+    sites: tuple = ()                  # "site:kind[:k=v,...]" spec strings
+    retries: int = 0                   # per-request retry budget (0 = off)
+    retry_backoff_ms: float = 1.0      # attempt k sleeps backoff * 2**k
+    retry_jitter: float = 0.5          # multiplicative jitter in [0, 1]
+    breaker_failures: int = 0          # consecutive device-tier failures
+    #                                    that open the breaker (0 = off)
+    breaker_cooldown_ms: float = 100.0  # open -> half-open wait
+    breaker_probes: int = 1            # half-open successes to close
+
+
 _SECTIONS: dict[str, type] = {"graph": GraphPlan, "kernel": KernelPlan,
                               "batch": BatchPlan, "shard": ShardPlan,
-                              "cache": CachePlan, "obs": ObsPlan}
+                              "cache": CachePlan, "obs": ObsPlan,
+                              "ft": FaultPlan}
 
 # legacy ServingEngine kwarg -> (section, field). The shim in
 # ``ServingEngine.__init__`` routes deprecated keyword construction here.
@@ -254,6 +305,10 @@ _FIELD_TYPES: dict[str, dict[str, str]] = {
               "device_resident": "bool", "device_slots": "int?"},
     "obs": {"trace": "bool", "trace_capacity": "int?",
             "sample_every": "int", "metrics": "bool"},
+    "ft": {"inject": "bool", "seed": "int", "sites": "strs",
+           "retries": "int", "retry_backoff_ms": "num",
+           "retry_jitter": "num", "breaker_failures": "int",
+           "breaker_cooldown_ms": "num", "breaker_probes": "int"},
 }
 
 
@@ -272,6 +327,9 @@ def _type_ok(kind: str, v: Any) -> bool:
         return isinstance(v, (int, float)) and not isinstance(v, bool)
     if kind == "bool_or_int":
         return isinstance(v, int)          # bool is a subtype of int
+    if kind == "strs":                     # tuple of str (lists were
+        return (isinstance(v, tuple)       # normalized before this check)
+                and all(isinstance(x, str) for x in v))
     raise AssertionError(kind)
 
 
@@ -292,6 +350,7 @@ class ServePlan:
     shard: ShardPlan = ShardPlan()
     cache: CachePlan = CachePlan()
     obs: ObsPlan = ObsPlan()
+    ft: FaultPlan = FaultPlan()
 
     # -- validation ---------------------------------------------------------
     def __post_init__(self):
@@ -307,6 +366,12 @@ class ServePlan:
                 raise PlanError(
                     f"plan section {name!r} must be a {cls.__name__} or a "
                     f"dict, got {type(v).__name__}")
+        # JSON carries tuples as lists: normalize ft.sites before the type
+        # check so a round-tripped plan compares equal to the original
+        if isinstance(self.ft.sites, list):
+            object.__setattr__(
+                self, "ft",
+                dataclasses.replace(self.ft, sites=tuple(self.ft.sites)))
         for name, fields in _FIELD_TYPES.items():
             section = getattr(self, name)
             for field, kind in fields.items():
@@ -315,8 +380,8 @@ class ServePlan:
                          f"{name}.{field} must be {kind.rstrip('?')}"
                          f"{' or None' if kind.endswith('?') else ''}, "
                          f"got {type(v).__name__} ({v!r})")
-        g, k, b, s, c, o = (self.graph, self.kernel, self.batch, self.shard,
-                            self.cache, self.obs)
+        g, k, b, s, c, o, f = (self.graph, self.kernel, self.batch,
+                               self.shard, self.cache, self.obs, self.ft)
 
         # hard errors: contradictions with no meaningful resolution
         _require(g.mode in MODES,
@@ -378,6 +443,25 @@ class ServePlan:
                  f"default), got {o.trace_capacity}")
         _require(o.sample_every >= 1,
                  f"sample_every must be >= 1, got {o.sample_every}")
+        _require(f.retries >= 0, f"retries must be >= 0, got {f.retries}")
+        _require(f.retry_backoff_ms >= 0,
+                 f"retry_backoff_ms must be >= 0, got {f.retry_backoff_ms}")
+        _require(0.0 <= f.retry_jitter <= 1.0,
+                 f"retry_jitter must be in [0, 1], got {f.retry_jitter}")
+        _require(f.breaker_failures >= 0,
+                 f"breaker_failures must be >= 0 (0 disables the breaker), "
+                 f"got {f.breaker_failures}")
+        _require(f.breaker_cooldown_ms >= 0,
+                 f"breaker_cooldown_ms must be >= 0, got "
+                 f"{f.breaker_cooldown_ms}")
+        _require(f.breaker_probes >= 1,
+                 f"breaker_probes must be >= 1, got {f.breaker_probes}")
+        for spec in f.sites:
+            try:
+                parse_fault_spec(spec)
+            except ValueError as e:
+                raise PlanError(f"invalid ft.sites spec {spec!r}: {e}") \
+                    from None
 
         # auto-resolutions: drop the no-op knob and say why (the previously
         # SILENT combos of the pre-plan engine)
@@ -471,6 +555,60 @@ class ServePlan:
                                dataclasses.replace(self.obs,
                                                    trace_capacity=None,
                                                    sample_every=1))
+        inj_knobs = [n for n, v in (("sites", f.sites or None),
+                                    ("seed", f.seed or None))
+                     if v is not None]
+        if inj_knobs and not f.inject:
+            notes.append(
+                f"ft.{'/'.join(inj_knobs)} without ft.inject=True: the "
+                f"fault injector only arms when inject is on — resolved to "
+                f"defaults (set inject=True to keep them)")
+            object.__setattr__(self, "ft",
+                               dataclasses.replace(self.ft, sites=(),
+                                                   seed=0))
+            f = self.ft
+        retry_knobs = [n for n, v in
+                       (("retry_backoff_ms",
+                         None if f.retry_backoff_ms == 1.0 else
+                         f.retry_backoff_ms),
+                        ("retry_jitter",
+                         None if f.retry_jitter == 0.5 else f.retry_jitter))
+                       if v is not None]
+        if retry_knobs and not f.retries:
+            notes.append(
+                f"ft.{'/'.join(retry_knobs)} without ft.retries > 0: they "
+                f"shape the retry schedule only — resolved to defaults")
+            object.__setattr__(self, "ft",
+                               dataclasses.replace(self.ft,
+                                                   retry_backoff_ms=1.0,
+                                                   retry_jitter=0.5))
+            f = self.ft
+        if f.breaker_failures and not c.device_resident:
+            notes.append(
+                "ft.breaker_failures without cache.device_resident: the "
+                "circuit breaker guards the device-resident stage-2 fast "
+                "path — with no device tier every pack already takes the "
+                "re-stacking route; resolved to breaker_failures=0")
+            object.__setattr__(self, "ft",
+                               dataclasses.replace(self.ft,
+                                                   breaker_failures=0))
+            f = self.ft
+        brk_knobs = [n for n, v in
+                     (("breaker_cooldown_ms",
+                       None if f.breaker_cooldown_ms == 100.0 else
+                       f.breaker_cooldown_ms),
+                      ("breaker_probes",
+                       None if f.breaker_probes == 1 else f.breaker_probes))
+                     if v is not None]
+        if brk_knobs and not f.breaker_failures:
+            notes.append(
+                f"ft.{'/'.join(brk_knobs)} without ft.breaker_failures > 0: "
+                f"they parameterize the circuit breaker only — resolved to "
+                f"defaults")
+            object.__setattr__(self, "ft",
+                               dataclasses.replace(self.ft,
+                                                   breaker_cooldown_ms=100.0,
+                                                   breaker_probes=1))
         # silent normalization (the engine's long-standing contract): the
         # smallest bucket can never exceed the row budget
         if b.min_bucket > b.max_batch:

@@ -126,8 +126,9 @@ class RankingService:
                                cache=self.shared_cache,
                                cache_scope=scenario)
         # the whole batch section rides the plan spine: continuous loop,
-        # in-flight budget, and admission thresholds included
-        batcher = CoalescingBatcher.from_plan(engine, plan.batch)
+        # in-flight budget, admission thresholds, and the ft section's
+        # retry knobs included
+        batcher = CoalescingBatcher.from_plan(engine, plan.batch, plan.ft)
         self._scenarios[scenario] = _Scenario(
             name=scenario, plan=plan, source_graph=graph,
             user_inputs=user_inputs, engine=engine, batcher=batcher)
@@ -202,6 +203,22 @@ class RankingService:
                     "shed_best_effort": s.batcher.shed_best_effort,
                     "shed_deadline": s.batcher.shed_deadline,
                     "degraded_requests": s.batcher.degraded_requests,
+                    # self-healing counters: retries/respawns on the
+                    # batcher, breaker + injector state on the engine —
+                    # the chaos harness asserts recovery through these
+                    "retries_attempted": s.batcher.retries_attempted,
+                    "retries_exhausted": s.batcher.retries_exhausted,
+                    "worker_crashes": s.batcher.worker_crashes,
+                    "worker_respawns": s.batcher.worker_respawns,
+                    "fallback_packs": getattr(s.engine, "fallback_packs", 0),
+                    "corruptions_detected": getattr(
+                        s.engine, "corruptions_detected", 0),
+                    "breaker": (s.engine.breaker.stats()
+                                if getattr(s.engine, "breaker", None)
+                                is not None else None),
+                    "faults": (s.engine.fault_injector.stats()
+                               if getattr(s.engine, "fault_injector", None)
+                               is not None else None),
                     "stage1_calls": s.engine.stage1_calls,
                     "stage2_calls": s.engine.stage2_calls,
                     "pipeline_forks": s.engine.pipeline_forks,
