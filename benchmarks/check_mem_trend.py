@@ -1,0 +1,168 @@
+"""CI gate for the memory-hierarchy benchmark (``benchmarks.memtier``).
+
+Compares a fresh ``--smoke`` payload against the committed
+``BENCH_mem.json`` baseline and fails (exit 1) when the tier contracts
+break. This gate — not per-run asserts inside ``memtier`` — owns them:
+
+* **trend**: every ``memtier/*`` row present in BOTH files must not
+  regress by more than ``--max-regress`` (default 60% — per-request
+  medians on shared CI runners are noisy) in ``us_per_call``;
+* **tier ordering (fresh)**: for every fresh point, the cold-hit median
+  must be STRICTLY below the recompute median — one arena read must beat
+  a stage-1 recompute or the tier is not paying for itself — and every
+  class must actually occur (a stream that never recomputes or never
+  cold-hits proves nothing);
+* **hit-rate floor (fresh)**: every fresh point's combined (hot + cold)
+  hit rate must clear ``--min-hit`` (default 0.85 — smoke universes are
+  small);
+* **bit-identity (fresh)**: the cache-off double-score check must have
+  run on the fresh payload and passed, covering >1 request class;
+* **acceptance (baseline)**: the committed baseline must carry the
+  U=1M point at >= ``--accept-hit`` (default 0.9) combined hit rate with
+  cold strictly below recompute — the tentpole claim, pinned to the
+  committed artifact so a smoke-only CI run still enforces it.
+
+Usage (what CI runs):
+
+    python -m benchmarks.memtier --smoke --json BENCH_mem_fresh.json
+    python -m benchmarks.check_mem_trend \
+        --baseline BENCH_mem.json --fresh BENCH_mem_fresh.json
+
+Faster-than-baseline rows never gate; improvements are committed by
+regenerating ``BENCH_mem.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CLASSES = ("hot", "cold", "recompute")
+
+
+def _rows(payload: dict) -> dict[str, dict]:
+    return {r["name"]: r for r in payload.get("rows", [])
+            if r["name"].startswith("memtier/")}
+
+
+def _points(payload: dict) -> dict[str, dict]:
+    return payload.get("memtier", {}).get("points", {})
+
+
+def check(baseline: dict, fresh: dict, max_regress: float,
+          min_hit: float, accept_hit: float,
+          accept_universe: int = 1_000_000) -> list[str]:
+    """Return the list of failure messages (empty == gate passes)."""
+    failures: list[str] = []
+    base_rows, fresh_rows = _rows(baseline), _rows(fresh)
+
+    # -- trend: per-row regression gate on shared rows ----------------------
+    print(f"{'row':40s} {'base_us':>10s} {'fresh_us':>10s} {'delta':>8s}")
+    for name in sorted(set(base_rows) & set(fresh_rows)):
+        b = float(base_rows[name]["us_per_call"])
+        f = float(fresh_rows[name]["us_per_call"])
+        delta = (f - b) / b if b else 0.0
+        mark = ""
+        if delta > max_regress:
+            mark = "  << REGRESSION"
+            failures.append(
+                f"regression: {name} {b:.1f}us -> {f:.1f}us "
+                f"({delta:+.0%} > {max_regress:.0%} budget)")
+        print(f"{name:40s} {b:10.1f} {f:10.1f} {delta:+7.0%}{mark}")
+    if not set(base_rows) & set(fresh_rows):
+        failures.append(
+            "no shared memtier/* rows between baseline and fresh — the "
+            "smoke universe must overlap the committed sweep")
+
+    # -- fresh contracts: tier ordering + hit-rate floor ---------------------
+    fresh_points = _points(fresh)
+    if not fresh_points:
+        failures.append("fresh payload has no memtier points")
+    for key, p in sorted(fresh_points.items(), key=lambda kv: int(kv[0])):
+        for cls in CLASSES:
+            if not p.get(cls, {}).get("n"):
+                failures.append(
+                    f"U={key}: request class {cls!r} never occurred — the "
+                    f"stream exercises nothing")
+        cold = p.get("cold", {}).get("p50_us")
+        rec = p.get("recompute", {}).get("p50_us")
+        if cold is not None and rec is not None and not cold < rec:
+            failures.append(
+                f"U={key}: cold-hit median {cold}us not strictly below "
+                f"recompute {rec}us — the arena read stopped paying for "
+                f"itself")
+        hr = p.get("hit_rate", 0.0)
+        print(f"# U={key}: hit_rate={hr} warmed={p.get('warmed')} "
+              f"cold={cold}us recompute={rec}us")
+        if hr < min_hit:
+            failures.append(
+                f"U={key}: combined hit rate {hr} < floor {min_hit}")
+
+    # -- fresh bit-identity ---------------------------------------------------
+    ident = [p for p in fresh_points.values() if "bit_identical" in p]
+    if not ident:
+        failures.append("fresh payload ran no bit-identity check")
+    for p in ident:
+        if not p["bit_identical"]:
+            failures.append(
+                f"U={p['universe']}: tiered scores diverged from the "
+                f"cache-off engine")
+        if len(p.get("identity_classes", [])) < 2:
+            failures.append(
+                f"U={p['universe']}: bit-identity covered only "
+                f"{p.get('identity_classes')} — needs >1 request class")
+
+    # -- baseline acceptance: the committed U=1M claim ------------------------
+    accept = _points(baseline).get(str(accept_universe))
+    if accept is None:
+        failures.append(
+            f"committed baseline is missing the U={accept_universe} "
+            f"acceptance point")
+    else:
+        hr = accept.get("hit_rate", 0.0)
+        cold = accept.get("cold", {}).get("p50_us")
+        rec = accept.get("recompute", {}).get("p50_us")
+        print(f"# baseline U={accept_universe}: hit_rate={hr} "
+              f"cold={cold}us recompute={rec}us")
+        if hr < accept_hit:
+            failures.append(
+                f"baseline U={accept_universe} hit rate {hr} < acceptance "
+                f"floor {accept_hit}")
+        if cold is None or rec is None or not cold < rec:
+            failures.append(
+                f"baseline U={accept_universe}: cold median {cold}us must "
+                f"be strictly below recompute {rec}us")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_mem.json",
+                    help="committed memtier JSON (the trend baseline)")
+    ap.add_argument("--fresh", default="BENCH_mem_fresh.json",
+                    help="memtier JSON from this run")
+    ap.add_argument("--max-regress", type=float, default=0.60,
+                    help="per-row us_per_call regression budget "
+                         "(0.60 = fail beyond +60%%)")
+    ap.add_argument("--min-hit", type=float, default=0.85,
+                    help="combined hit-rate floor for every fresh point")
+    ap.add_argument("--accept-hit", type=float, default=0.90,
+                    help="hit-rate floor for the committed U=1M point")
+    args = ap.parse_args()
+    with open(args.baseline) as fh:
+        baseline = json.load(fh)
+    with open(args.fresh) as fh:
+        fresh = json.load(fh)
+    failures = check(baseline, fresh, args.max_regress, args.min_hit,
+                     args.accept_hit)
+    if failures:
+        print(f"\nFAIL: {len(failures)} memtier violation(s)")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nOK: memtier rows within trend budget, tier contracts hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -21,6 +21,14 @@ best_effort requests are shed (typed ``AdmissionError``, failing fast at
 submit) or degraded (candidate pool truncated) while every deadline-tagged
 request completes at full pool size — the SLO tiering in one printout.
 
+Part 4 — hierarchical memory tier: the user universe is bulk-``warm``ed
+OFFLINE into the host-RAM cold arena (``MemPlan.cold_tier``) through the
+engine's own jitted stage 1, then the part-2 burst is replayed against a
+deliberately tiny hot LRU. Every request is served from a tier — hot hit
+or one cold-arena read — with zero online stage-1 recomputes, scores
+bit-identical to the recompute path, and repeat traffic promoted back to
+the hot tier by the async promotion worker.
+
   PYTHONPATH=src python examples/serve_ranking.py [--candidates 4096]
 """
 import argparse
@@ -220,6 +228,36 @@ def main():
           f"degraded_requests={sc['degraded_requests']}  "
           f"pipeline_forks={sc['pipeline_forks']}")
     print("deadline tier untouched under overload ✓")
+
+    # ---- part 4: memory tier — warm offline, cold-hit online, promote -----
+    print("\n-- memory tier (mari): bulk-warm offline, serve from the cold "
+          "arena, promote repeat users --")
+    # hot LRU deliberately smaller than the user universe: users live ONLY
+    # in the host-RAM arena until the promotion worker sees repeat traffic
+    mem_eng = ServingEngine(graph, params, plan=base_plan.evolve(
+        graph__mode="mari", batch__hedging=False,
+        cache__max_cached_users=2, mem__cold_tier=True))
+    warmed = mem_eng.warm(sorted(user_feeds.items()))
+    warm_results = [mem_eng.score(r) for r in burst]
+    hot = sum(r.user_cache_hit for r in warm_results)
+    cold = sum(r.cold_hit for r in warm_results)
+    assert mem_eng.stage1_calls == 0, \
+        "warmed users must never pay stage 1 online"
+    for w, s in zip(warm_results, seq_results):
+        assert np.array_equal(w.scores, s.scores), \
+            "warmed reps changed scores"
+    mem_eng.flush_promotions()
+    ms = mem_eng.mem_stats()
+    print(f"[warm      ] users={warmed}  "
+          f"arena_bytes={ms['cold']['bytes']}  "
+          f"stage1_launches={ms['warm']['stage1_launches']}")
+    print(f"[stream    ] hot_hits={hot}  cold_hits={cold}  "
+          f"stage1_recomputes={mem_eng.stage1_calls}  "
+          f"promotions={ms['promote']['promotions']}  "
+          f"demotions={ms['demotions']}")
+    print("every request tier-served, warmed reps bit-identical to "
+          "recomputed ✓")
+    mem_eng.close()
     if args.trace:
         from repro.obs import write_trace
         tracers = {}

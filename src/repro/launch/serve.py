@@ -20,6 +20,11 @@ registry models.
 Chrome trace-event file (load it at https://ui.perfetto.dev) covering the
 whole request lifecycle — stage-1 spans, cache hit/miss instants, pack/
 dispatch/collect, and one synthetic track per outstanding group.
+
+``--cold-tier`` arms the ``MemPlan`` host-RAM cold tier, bulk-warms the
+even user ids of the synthetic stream into the cold arena, and reports
+cold hits / async promotions after the stream — so a traced run emits
+the ``warm`` / ``cold_hit`` / ``promote`` instants.
 """
 from __future__ import annotations
 
@@ -57,9 +62,25 @@ def build_plan(args) -> ServePlan:
         over["kernel__use_pallas"] = args.use_pallas
     if args.continuous is not None:
         over["batch__continuous"] = args.continuous
+    if args.cold_tier is not None:
+        over["mem__cold_tier"] = args.cold_tier
     if args.trace:
         over["obs__trace"] = True
     return plan.evolve(**over) if over else plan
+
+
+def _warm_half(warm, graph, split, candidates: int, n_uids: int = 8):
+    """Bulk-warm the EVEN user ids of the launcher's ``r % n_uids`` stream
+    into the cold arena. Odd ids stay unwarmed, so one interleaved stream
+    deterministically exercises every tier: even ids cold-hit (and, after
+    enough touches, promote); odd ids pay stage 1 once and then hot-hit."""
+    key = jax.random.PRNGKey(11)
+    items = []
+    for uid in range(0, n_uids, 2):
+        key, k = jax.random.split(key)
+        uf, _ = split(make_recsys_feeds(graph, candidates, k))
+        items.append((uid, uf))
+    return warm(items)
 
 
 def _summary(tag: str, lats: list[float]) -> None:
@@ -85,6 +106,14 @@ def serve_single(args, plan: ServePlan) -> None:
 
     user_in = {n.name for n in graph.input_nodes()
                if n.attrs.get("domain") == "user"}
+
+    def split(feeds):
+        return ({k: v for k, v in feeds.items() if k in user_in},
+                {k: v for k, v in feeds.items() if k not in user_in})
+
+    if engine.cold_tier:
+        warmed = _warm_half(engine.warm, graph, split, args.candidates)
+        print(f"[serve] warmed {warmed} users into the cold tier")
     lats = []
     key = jax.random.PRNGKey(7)
     for r in range(args.requests):
@@ -97,6 +126,12 @@ def serve_single(args, plan: ServePlan) -> None:
                              if k2 not in user_in})
         res = engine.score(req)
         lats.append(res.latency_ms)
+    if engine.cold_tier:
+        engine.flush_promotions()
+        ms = engine.mem_stats()
+        print(f"[serve] mem cold_users={ms['cold']['users']} "
+              f"cold_hits={ms['cold_hits']} "
+              f"promotions={ms['promote']['promotions']}")
     if args.trace and engine.tracer is not None:
         from repro.obs import write_trace
         write_trace(args.trace, {args.arch: engine.tracer})
@@ -117,6 +152,15 @@ def serve_multi(args, plan: ServePlan, scenarios: list[str]) -> None:
             svc.register(sc)
         print(f"[serve] scenarios={','.join(svc.scenarios)} "
               f"(interleaved round-robin)")
+        for sc in scenarios:
+            if svc.engine(sc).cold_tier:
+                warmed = _warm_half(
+                    lambda items, sc=sc: svc.warm(sc, items),
+                    svc.source_graph(sc),
+                    lambda feeds, sc=sc: svc.split_feeds(sc, feeds),
+                    args.candidates)
+                print(f"[serve] scenario={sc} warmed {warmed} users into "
+                      f"the cold tier")
         key = jax.random.PRNGKey(7)
         items = []
         for r in range(args.requests):
@@ -138,6 +182,15 @@ def serve_multi(args, plan: ServePlan, scenarios: list[str]) -> None:
         print(f"[serve] shared_cache users={cache['users']} "
               f"hits={cache['hits']} misses={cache['misses']} "
               f"evictions={cache['evictions']}")
+        for sc in scenarios:
+            eng = svc.engine(sc)
+            if eng.cold_tier:
+                eng.flush_promotions()
+                ms = eng.mem_stats()
+                print(f"[serve] scenario={sc} mem "
+                      f"cold_users={ms['cold']['users']} "
+                      f"cold_hits={ms['cold_hits']} "
+                      f"promotions={ms['promote']['promotions']}")
         if args.trace:
             tracers = {sc: svc.engine(sc).tracer for sc in svc.scenarios
                        if svc.engine(sc).tracer is not None}
@@ -191,6 +244,11 @@ def main():
                     action=argparse.BooleanOptionalAction, default=None,
                     help="continuous (two-phase overlapped) dispatch loop "
                          "in the scenario batchers")
+    ap.add_argument("--cold-tier",
+                    action=argparse.BooleanOptionalAction, default=None,
+                    help="host-RAM cold rep tier (MemPlan): bulk-warm the "
+                         "even user ids of the stream, serve cold hits "
+                         "from the arena, promote hot users async")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="enable ObsPlan tracing and write a Perfetto-"
                          "loadable Chrome trace-event JSON here")

@@ -1,0 +1,36 @@
+"""Hierarchical memory tier for the serving runtime (``MemPlan``).
+
+MaRI's win is reusing user-side precompute; this package is what lets
+"reusing" scale past one device's memory. It layers a third tier UNDER the
+existing hot host LRU (``repro.serve.cache.UserRepCache``) and device slot
+table (``DeviceRepStore``):
+
+* ``cold``    — ``ColdRepStore``: a byte-budgeted, slab-allocated host-RAM
+  numpy arena per stage-2 boundary, keyed ``(user_id, feature_version)``.
+  Hot-LRU eviction DEMOTES reps here instead of discarding them; a later
+  request pays one arena read instead of a stage-1 recompute.
+* ``promote`` — ``PromotionWorker``: a background thread applying a
+  Zipf-friendly frequency gate (k touches within a window) before copying
+  a cold row back into the hot LRU — one-shot tail users never thrash the
+  hot/device tiers, and promotion never blocks a request.
+* ``warm``    — ``RepWarmer``: the bulk offline feed — batched stage-1
+  dispatch straight into the cold arena, so a warmed user's first live
+  request is already a hit.
+
+Tier walk on a request: hot LRU -> device slots (resolve) on a hot hit;
+on a hot miss, cold arena (serve from the read, touch the promoter,
+stay OFF the device tier); only a full miss recomputes stage 1. Every
+path is bit-identical — cold rows are raw copies of stage-1 outputs and
+cold-served packs take the engine's re-stacking route.
+
+Everything is driven by the plan spine: ``ServePlan.mem``
+(``repro.serve.plan.MemPlan``) with ``cold_tier`` / ``cold_bytes`` /
+``promote_touches`` / ``promote_window_s`` / ``warm_batch``; the engine
+wires the tiers, the obs instants (``cold_hit`` / ``cold_miss`` /
+``promote`` / ``demote`` / ``warm``) and the per-tier gauges.
+``benchmarks/memtier.py`` measures the hit-rate/latency frontier up to
+U=1M users.
+"""
+from repro.mem.cold import ColdRepStore  # noqa: F401
+from repro.mem.promote import PromotionWorker  # noqa: F401
+from repro.mem.warm import RepWarmer  # noqa: F401

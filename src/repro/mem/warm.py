@@ -1,0 +1,85 @@
+"""``RepWarmer`` — the bulk warming feed into the cold tier.
+
+Warming precomputes stage-1 representations OFFLINE (from a training
+refresh, a nightly job, a launch ramp) straight into the cold arena, so a
+warmed user's first live request is already a cold hit: one arena read,
+zero stage-1 compute on the request path.
+
+Bit-identity contract: the warmer dispatches the engine's OWN jitted
+stage-1 executable per user at the live path's exact ``(1, ...)`` feed
+shapes — never a differently-batched variant — so a warmed rep is
+bit-identical to what the request path would have computed, and serving
+from it is bit-identical to recompute. Batching happens at the dispatch
+level instead: launches within a ``batch``-sized chunk are enqueued
+asynchronously and synced ONCE per chunk, so the device pipelines the
+chunk while the host stores the previous one — the offline feed runs at
+throughput without touching the numerics.
+
+Duplicate-feed memoization: callers replaying one feed dict across many
+user ids (synthetic universes, template users, the benchmarks' pool-reuse
+pattern) pay stage 1 once per DISTINCT feeds object per ``warm`` call —
+identical inputs compute identical rows, so the memo is value-exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Hashable, Iterable, Mapping, Sequence
+
+Item = tuple[Hashable, Hashable, Mapping[str, Any]]
+#      (user_id, feature_version, user_feeds)
+
+
+class RepWarmer:
+    """Batched offline stage-1 feed into a ``ColdRepStore``.
+
+    ``stage1_fn(params, user_feeds) -> reps`` is the (jitted,
+    non-blocking) user-tower executable; ``cold`` the destination arena;
+    ``batch`` the chunk size between device syncs.
+    """
+
+    def __init__(self, stage1_fn, cold, *, batch: int = 256, tracer=None):
+        if batch < 1:
+            raise ValueError(f"batch must be >= 1, got {batch}")
+        self.stage1_fn = stage1_fn
+        self.cold = cold
+        self.batch = batch
+        self._tracer = tracer
+        self.warmed = 0              # users written into the cold tier
+        self.stage1_launches = 0     # distinct stage-1 dispatches paid
+
+    def warm(self, items: Iterable[Item], params) -> int:
+        """Precompute reps for ``items`` into the cold tier; returns the
+        number of users warmed. Items are ``(user_id, feature_version,
+        user_feeds)`` with user feeds at leading dim 1."""
+        import jax
+        import numpy as np
+
+        items = list(items)
+        total = 0
+        for lo in range(0, len(items), self.batch):
+            chunk = items[lo:lo + self.batch]
+            # launch the whole chunk without blocking; memoize by feeds
+            # object identity (same object => same values => same reps)
+            memo: dict[int, Any] = {}
+            launched: list[tuple[Hashable, Hashable, int]] = []
+            for uid, ver, feeds in chunk:
+                fid = id(feeds)
+                if fid not in memo:
+                    memo[fid] = self.stage1_fn(params, feeds)
+                    self.stage1_launches += 1
+                launched.append((uid, ver, fid))
+            # one sync per chunk: the device pipelines the chunk's
+            # dispatches while the host was still enqueueing them —
+            # then materialize each distinct result to numpy ONCE and
+            # fan it out to every user id that shares it (the arena
+            # copies rows into its slabs, so sharing the source is safe)
+            jax.block_until_ready(list(memo.values()))
+            memo_np = {fid: {k: np.asarray(v) for k, v in r.items()}
+                       for fid, r in memo.items()}
+            for uid, ver, fid in launched:
+                self.cold.put((uid, ver), memo_np[fid])
+            total += len(launched)
+            self.warmed += len(launched)
+            if self._tracer is not None:
+                self._tracer.instant("warm", users=len(launched),
+                                     total=self.warmed)
+        return total

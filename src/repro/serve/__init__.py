@@ -54,6 +54,16 @@ fallback while open, device-tier quarantine on failed donated writes,
 and batcher worker supervision — see ``serve/README.md`` § Failure
 handling.
 
+The memory hierarchy rides the plan spine as the ``mem`` section
+(``MemPlan``, backed by ``repro.mem``): ``mem__cold_tier=True`` adds a
+byte-budgeted host-RAM cold arena UNDER the hot LRU — evictions demote
+into it instead of discarding, a hot miss with a cold hit serves from
+one arena read (no stage-1 recompute, no device slot), an async worker
+promotes only users touched ``promote_touches`` times within
+``promote_window_s`` back to hot, and ``ServingEngine.warm`` /
+``RankingService.warm`` bulk-precompute reps straight into the arena —
+see ``serve/README.md`` § Memory hierarchy.
+
 Observability rides the plan spine too (``ObsPlan``): ``obs__trace=True``
 threads a ``repro.obs.Tracer`` through engine/batcher/cache (request and
 group timelines, exported to Perfetto via ``repro.obs.export``), and
@@ -89,6 +99,7 @@ from repro.serve.plan import (  # noqa: F401
     FaultPlan,
     GraphPlan,
     KernelPlan,
+    MemPlan,
     ObsPlan,
     PlanError,
     PlanResolutionWarning,

@@ -17,10 +17,17 @@ that is an OOM, not a cache. ``UserRepCache`` is the replacement:
 * **thread safety** — the async batcher's worker thread and callers of
   ``ServingEngine.score`` touch the cache concurrently; every mutation is
   taken under one lock.
-* **removal listeners** — ``subscribe`` registers callbacks fired (outside
-  the lock) whenever a user's entry leaves the cache for ANY reason
-  (LRU eviction, version supersede, invalidation, clear). The device tier
-  below uses this to recycle its slots in lockstep with the host tier.
+* **removal listeners** — ``subscribe`` registers callbacks fired whenever
+  a user's entry leaves the cache for ANY reason (LRU eviction, version
+  supersede, invalidation, clear). The device tier below uses this to
+  recycle its slots in lockstep with the host tier;
+  ``subscribe_removal`` delivers the full removal record
+  ``(user_id, version, reps, reason)`` — the cold tier (``repro.mem``)
+  uses it to demote evicted reps instead of discarding them. Listener
+  snapshots are taken under the SAME lock acquisition as the mutation
+  and callbacks fire strictly after release: listeners are free to take
+  their own locks (the cold-tier arena lock, the device-store lock)
+  without any lock-order inversion against the cache lock.
 
 ``DeviceRepStore`` is the *device tier*: instead of re-stacking cached
 per-user rows into a fresh ``(U, ...)`` table on every bucket dispatch
@@ -39,6 +46,15 @@ from collections import OrderedDict
 from typing import Any, Callable, Hashable, Mapping, Sequence
 
 Key = tuple[Hashable, Hashable]          # (user_id, feature_version)
+
+# removal reasons delivered to subscribe_removal listeners
+EVICT = "evict"            # LRU-bound eviction (reps still valid: demotable)
+SUPERSEDE = "supersede"    # newer feature_version replaced the entry
+INVALIDATE = "invalidate"  # explicit invalidate_user (GDPR/logout/backfill)
+CLEAR = "clear"            # cache.clear()
+
+# one removal: (user_id, feature_version, reps, reason)
+Removal = tuple[Hashable, Hashable, Mapping[str, Any], str]
 
 
 def _reps_nbytes(reps: Mapping[str, Any]) -> dict[str, int]:
@@ -70,6 +86,7 @@ class UserRepCache:
         self.hits = 0
         self.misses = 0
         self._listeners: list[Callable[[Hashable], None]] = []
+        self._removal_listeners: list[Callable[..., None]] = []
         self._tracer = None              # repro.obs.Tracer, when tracing
 
     def set_tracer(self, tracer) -> None:
@@ -82,26 +99,44 @@ class UserRepCache:
     def subscribe(self, on_remove: Callable[[Hashable], None]) -> None:
         """Register a callback fired with ``user_id`` whenever that user's
         entry leaves the cache (eviction, supersede, invalidate, clear).
-        Callbacks run outside the cache lock. Registration takes the
-        cache lock: with a shared cache, one scenario may subscribe while
-        another is serving (and notifying)."""
+        Callbacks run outside the cache lock (snapshot taken inside the
+        mutating acquisition, fired after release), so they may take
+        their own locks. Registration takes the cache lock: with a
+        shared cache, one scenario may subscribe while another is
+        serving (and notifying)."""
         with self._lock:
             self._listeners.append(on_remove)
 
-    def _notify(self, removed: Sequence[Hashable]) -> None:
+    def subscribe_removal(self, on_remove: Callable[..., None]) -> None:
+        """Like ``subscribe`` but the callback receives the FULL removal
+        record ``(user_id, feature_version, reps, reason)`` with reason
+        one of ``evict`` / ``supersede`` / ``invalidate`` / ``clear``.
+        Only ``evict`` removals carry reps that are still the live value
+        for their key — the cold tier demotes those; the other reasons
+        mean the reps are stale and must not be re-served."""
+        with self._lock:
+            self._removal_listeners.append(on_remove)
+
+    def _snapshot_listeners(self) -> tuple[tuple, tuple]:
+        """Caller must hold ``_lock`` — the one mutating acquisition."""
+        return tuple(self._listeners), tuple(self._removal_listeners)
+
+    def _fire(self, removed: Sequence[Removal],
+              listeners: tuple, removal_listeners: tuple) -> None:
+        """Deliver removal callbacks strictly OUTSIDE the cache lock, on
+        the snapshots taken inside the mutating acquisition (no second
+        acquisition — rules out lock-order inversion against listener
+        locks such as the cold-tier arena lock)."""
         if not removed:
             return
         trc = self._tracer
-        if trc is not None:
-            for uid in removed:
-                trc.instant("cache_evict", user=uid)
-        # snapshot under the lock (subscribe appends under it too), then
-        # fire outside it — callbacks must be free to touch other locks
-        with self._lock:
-            listeners = tuple(self._listeners)
-        for uid in removed:
+        for uid, ver, reps, reason in removed:
+            if trc is not None:
+                trc.instant("cache_evict", user=uid, reason=reason)
             for cb in listeners:
                 cb(uid)
+            for cb in removal_listeners:
+                cb(uid, ver, reps, reason)
 
     def get(self, key: Key) -> Mapping[str, Any] | None:
         user_id, version = key
@@ -116,34 +151,40 @@ class UserRepCache:
 
     def put(self, key: Key, reps: Mapping[str, Any]) -> None:
         user_id, version = key
-        removed = []
+        removed: list[Removal] = []
         with self._lock:
             # one live entry per user: a newer feature_version overwrites
             # (and frees) the old reps rather than accumulating beside them
             prev = self._entries.get(user_id)
             if prev is not None and prev[0] != version:
-                removed.append(user_id)
+                removed.append((user_id, prev[0], prev[1], SUPERSEDE))
             self._entries[user_id] = (version, reps)
             self._entries.move_to_end(user_id)
             while self.max_users is not None and len(self._entries) > self.max_users:
-                evicted, _ = self._entries.popitem(last=False)
+                evicted, (ever, ereps) = self._entries.popitem(last=False)
                 self.evictions += 1
-                removed.append(evicted)
-        self._notify(removed)
+                removed.append((evicted, ever, ereps, EVICT))
+            listeners, removal_listeners = self._snapshot_listeners()
+        self._fire(removed, listeners, removal_listeners)
 
     def invalidate_user(self, user_id: Hashable) -> int:
         """Drop the cached entry of ``user_id``; returns entries removed."""
+        removed: list[Removal] = []
         with self._lock:
-            n = 0 if self._entries.pop(user_id, None) is None else 1
-        if n:
-            self._notify([user_id])
-        return n
+            entry = self._entries.pop(user_id, None)
+            if entry is not None:
+                removed.append((user_id, entry[0], entry[1], INVALIDATE))
+            listeners, removal_listeners = self._snapshot_listeners()
+        self._fire(removed, listeners, removal_listeners)
+        return len(removed)
 
     def clear(self) -> None:
         with self._lock:
-            removed = list(self._entries)
+            removed = [(uid, ver, reps, CLEAR)
+                       for uid, (ver, reps) in self._entries.items()]
             self._entries.clear()
-        self._notify(removed)
+            listeners, removal_listeners = self._snapshot_listeners()
+        self._fire(removed, listeners, removal_listeners)
 
     def stats(self) -> dict:
         """Occupancy + byte accounting of the host tier.

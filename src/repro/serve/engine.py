@@ -121,9 +121,10 @@ from repro.ft.faults import CORRUPT, FaultInjector
 from repro.ft.recovery import CircuitBreaker
 from repro.graph.executor import Executor, USER_INDEX_FEED
 from repro.graph.ir import Graph
+from repro.mem import ColdRepStore, PromotionWorker, RepWarmer
 from repro.obs.metrics import MetricsRegistry
 from repro.obs.trace import DEFAULT_CAPACITY, Tracer
-from repro.serve.cache import DeviceRepStore, UserRepCache
+from repro.serve.cache import EVICT, DeviceRepStore, UserRepCache
 from repro.serve.errors import FaultInjected
 from repro.serve.hedging import HedgedRunner, HedgePolicy
 from repro.serve.plan import ServePlan
@@ -148,6 +149,8 @@ class ServeResult:
     stage1_ms: float = 0.0       # 0 when cached / single-stage
     coalesced: bool = False      # scored inside a cross-user batch
     degraded: bool = False       # candidate pool truncated under overload
+    cold_hit: bool = False       # served from the host-RAM cold tier (no
+    #                              stage-1 recompute, no hot/device slot)
 
 
 def _precat_mari_weights(graph: Graph, params: dict) -> dict:
@@ -185,6 +188,7 @@ class _ReqInfo:                   # per-request working state inside a batch
     stage1_ms: float
     chunks: list[tuple[dict, int]]
     slot_key: object
+    cold_hit: bool = False        # reps came from the cold arena read
 
 
 @dataclasses.dataclass(eq=False)
@@ -542,6 +546,106 @@ class ServingEngine:
                               if self._device_store is not None else 0))):
                 self.metrics.gauge(name, fn)
 
+        # -- hierarchical memory tier (plan.mem, repro.mem): host-RAM cold
+        # store + async promotion + bulk warming. Off by default. The cold
+        # tier only makes sense under a live hot cache (plan resolution
+        # already drops cold_tier without cache_user_reps; single-stage
+        # engines force caching off above, which drops it here too). --
+        self.cold_tier = plan.mem.cold_tier and self.cache_user_reps
+        self._cold: ColdRepStore | None = None
+        self._promoter: PromotionWorker | None = None
+        self._warmer: RepWarmer | None = None
+        self.cold_hits = 0            # requests served from the arena read
+        self.cold_misses = 0          # full misses past an armed cold tier
+        self.demotions = 0            # hot-LRU evictions caught by the arena
+        if self.cold_tier:
+            self._cold = ColdRepStore(plan.mem.cold_bytes)
+            self._promoter = PromotionWorker(
+                self._cold, self.cache,
+                touches=plan.mem.promote_touches,
+                window_s=plan.mem.promote_window_s, tracer=self.tracer)
+            self._warmer = RepWarmer(self._warm_stage1, self._cold,
+                                     batch=plan.mem.warm_batch,
+                                     tracer=self.tracer)
+            # hot-LRU evictions DEMOTE into the arena instead of being
+            # discarded (fired outside the cache lock — see cache.py —
+            # so the arena's leaf lock can never invert against it)
+            self.cache.subscribe_removal(self._on_cache_removal)
+            if self.metrics is not None:
+                for name, fn in (
+                        ("cold_hits", lambda: self.cold_hits),
+                        ("cold_misses", lambda: self.cold_misses),
+                        ("demotions", lambda: self.demotions),
+                        ("promotions", lambda: self._promoter.promotions),
+                        ("warmed_users", lambda: self._warmer.warmed),
+                        ("cold_users", lambda: len(self._cold)),
+                        ("cold_tier_bytes",
+                         lambda: self._cold.stats()["bytes"])):
+                    self.metrics.gauge(name, fn)
+
+    # -- hierarchical memory tier hooks --------------------------------------
+    def _warm_stage1(self, params, feeds):
+        """The warmer dispatches the engine's OWN jitted stage-1 executable
+        at the live path's (1, ...) feed shapes — warmed reps are
+        bit-identical to what a request would have computed."""
+        return self._stage1(params, {k: v for k, v in feeds.items()
+                                     if k in self._stage1_inputs})
+
+    def _on_cache_removal(self, user_id, version, reps, reason) -> None:
+        """Hot-cache removal listener: evictions demote into the cold
+        arena; supersede/invalidate/clear drop any cold copy too (a stale
+        version must never be re-promoted). Runs outside the cache lock."""
+        if self._cold is None:
+            return
+        if self._cache_scope is not None and not (
+                isinstance(user_id, tuple) and len(user_id) == 2
+                and user_id[0] == self._cache_scope):
+            return                    # another scenario's keys in a shared
+            #                           cache: not this arena's layout
+        if reason == EVICT:
+            self._cold.put((user_id, version), reps)
+            self.demotions += 1
+            if self.tracer is not None:
+                self.tracer.instant("demote", user=user_id)
+        else:
+            self._cold.drop(user_id)
+
+    def warm(self, items, feature_version: int = 0) -> int:
+        """Bulk-precompute stage-1 reps straight into the cold tier.
+
+        ``items`` is an iterable of ``(user_id, user_feeds)`` pairs (feeds
+        at leading dim 1, same dict a ``ServeRequest`` would carry); a
+        warmed user's first live request is a cold hit — one arena read,
+        no stage-1 recompute. Returns the number of users warmed."""
+        if not self.cold_tier:
+            raise RuntimeError(
+                "warm() requires plan.mem.cold_tier=True (and a two-stage "
+                "engine with cache_user_reps)")
+        triples = [(self._scoped_uid(uid), feature_version, feeds)
+                   for uid, feeds in items]
+        return self._warmer.warm(triples, self.params)
+
+    def flush_promotions(self, timeout: float | None = 10.0) -> None:
+        """Block until every cold-hit touch recorded so far has been
+        processed by the promotion worker (deterministic tests/benches)."""
+        if self._promoter is not None:
+            self._promoter.flush(timeout)
+
+    def mem_stats(self) -> dict:
+        """One snapshot of the memory hierarchy (all tiers)."""
+        if not self.cold_tier:
+            return {"cold_tier": False}
+        return {
+            "cold_tier": True,
+            "cold_hits": self.cold_hits,
+            "cold_misses": self.cold_misses,
+            "demotions": self.demotions,
+            "cold": self._cold.stats(),
+            "promote": self._promoter.stats(),
+            "warm": {"warmed": self._warmer.warmed,
+                     "stage1_launches": self._warmer.stage1_launches},
+        }
+
     def _on_breaker_transition(self, old: str, new: str) -> None:
         trc = self.tracer
         if trc is not None:
@@ -694,12 +798,25 @@ class ServingEngine:
                 else (self._cache_scope, user_id))
 
     def _user_reps(self, req: ServeRequest
-                   ) -> tuple[Mapping[str, jax.Array], bool, float]:
+                   ) -> tuple[Mapping[str, jax.Array], bool, float, bool]:
         key = (self._scoped_uid(req.user_id), req.feature_version)
         if self.cache_user_reps:
             reps = self.cache.get(key)
             if reps is not None:
-                return reps, True, 0.0
+                return reps, True, 0.0, False
+            if self._cold is not None:
+                creps = self._cold.get(key)
+                if creps is not None:
+                    # cold hit: serve straight from the arena read — no
+                    # stage-1 recompute, no hot put (the async promotion
+                    # worker decides residency OFF the request path, so a
+                    # one-shot tail user never evicts a hot user), no
+                    # device slot (cold-served packs take the re-stacking
+                    # route — see _resolve_device_slots)
+                    self.cold_hits += 1
+                    self._promoter.touch(key)
+                    return creps, False, 0.0, True
+                self.cold_misses += 1
         if self.two_stage:
             self._poke("stage1", user=req.user_id)
             t0 = time.perf_counter()
@@ -720,7 +837,7 @@ class ServingEngine:
             reps, ms = dict(req.user_feeds), 0.0
         if self.cache_user_reps:
             self.cache.put(key, reps)
-        return reps, False, ms
+        return reps, False, ms, False
 
     # -- scoring ------------------------------------------------------------
     def score(self, req: ServeRequest) -> ServeResult:
@@ -794,14 +911,18 @@ class ServingEngine:
         trc = self.tracer
         infos: list[_ReqInfo] = []
         for ri, req in enumerate(reqs):
-            reps, hit, s1ms = self._user_reps(req)
+            reps, hit, s1ms, chit = self._user_reps(req)
             if trc is not None:
                 self._trace_req_seq += 1
                 if trc.sampled(self._trace_req_seq):
-                    trc.instant("cache_hit" if hit else "cache_miss",
+                    trc.instant("cache_hit" if hit
+                                else "cold_hit" if chit else "cache_miss",
                                 group=gid, user=req.user_id)
+                    if not hit and not chit and self._cold is not None:
+                        trc.instant("cold_miss", group=gid,
+                                    user=req.user_id)
             infos.append(_ReqInfo(
-                reps=reps, hit=hit, stage1_ms=s1ms,
+                reps=reps, hit=hit, stage1_ms=s1ms, cold_hit=chit,
                 chunks=self._chunk(req.candidate_feeds),
                 # slot dedup follows the cache: with it on, every request
                 # with one (user, version) key resolves to the SAME cached
@@ -851,9 +972,12 @@ class ServingEngine:
         # generation (old buffer stays alive for the in-flight launches),
         # later writes of this call donate the unpublished fork in place.
         # All-resident calls (the Zipf-hot steady state) skip even the copy.
+        cold_keys = {info.slot_key for info in infos if info.cold_hit}
         forked = False
         if self._device_store is not None and self._inflight:
-            keys = {info.slot_key for info in infos}
+            # cold-served keys never get a table-row write (their packs
+            # re-stack), so they cannot trigger the fork
+            keys = {info.slot_key for info in infos} - cold_keys
             if any(not self._device_store.is_live(self._scoped_uid(u), v)
                    for u, v in keys):
                 self.pipeline_forks += 1
@@ -868,7 +992,7 @@ class ServingEngine:
         # an in-flight executable (the fork above covers the case where
         # launches ARE outstanding)
         with prof.phase("pack"):
-            dslots = self._resolve_device_slots(packs)
+            dslots = self._resolve_device_slots(packs, cold_keys)
         if forked:
             # the anticipated write may never have happened (e.g. every
             # pack fell back to re-stacking): a stale mark must not fork
@@ -1039,11 +1163,14 @@ class ServingEngine:
             scores=np.concatenate(per_req_scores[ri], axis=0),
             latency_ms=wall_ms, n_batches=per_req_packs[ri],
             user_cache_hit=infos[ri].hit, hedged=per_req_hedged[ri],
-            stage1_ms=infos[ri].stage1_ms, coalesced=len(reqs) > 1)
+            stage1_ms=infos[ri].stage1_ms, coalesced=len(reqs) > 1,
+            cold_hit=infos[ri].cold_hit)
             for ri in range(len(reqs))]
 
     # -- pack preparation ----------------------------------------------------
-    def _resolve_device_slots(self, packs: list) -> list[list[int] | None]:
+    def _resolve_device_slots(self, packs: list,
+                              cold_keys: set = frozenset()
+                              ) -> list[list[int] | None]:
         """Map every pack's slot keys to device-table slots (one donated
         row write per user not already resident). ``None`` per pack when
         the device tier is off or that pack overflowed capacity — the pack
@@ -1060,7 +1187,13 @@ class ServingEngine:
 
         Every device-resolved user of the CALL is protected while
         resolving: a later pack's write may never steal a slot an
-        earlier (already prepared) pack still references."""
+        earlier (already prepared) pack still references.
+
+        ``cold_keys`` are slot keys served from the cold tier this call:
+        their packs also fall back — a cold-served (by policy, tail) user
+        must not cost a device-table row write or steal a hot user's
+        slot, and with no hot-cache entry there is no eviction listener
+        to ever free the slot in lockstep."""
         if self._device_store is None:
             return [None] * len(packs)
         if self.breaker is not None and not self.breaker.allow():
@@ -1083,7 +1216,9 @@ class ServingEngine:
         per_pack = []
         protect: list = []
         for _, slot_reps, slot_keys in packs:
-            if any(uid in conflicted for uid, _ in slot_keys):
+            if (any(uid in conflicted for uid, _ in slot_keys)
+                    or (cold_keys
+                        and any(k in cold_keys for k in slot_keys))):
                 per_pack.append(None)
                 continue
             triples = [(self._scoped_uid(uid), ver, reps)
@@ -1267,10 +1402,16 @@ class ServingEngine:
 
     def invalidate_user(self, user_id: int) -> None:
         self.cache.invalidate_user(self._scoped_uid(user_id))
+        if self._cold is not None:
+            # a warmed-but-never-promoted user lives ONLY in the cold
+            # arena — the hot cache fires no removal listener for it
+            self._cold.drop(self._scoped_uid(user_id))
 
     def close(self) -> None:
         # uncollected begin_coalesced launches must not outlive the engine
         self._drain_inflight()
         self._inflight.clear()
+        if self._promoter is not None:
+            self._promoter.stop()
         if self._hedged is not None:
             self._hedged.close()

@@ -31,6 +31,13 @@ Sections (each its own frozen dataclass):
   ``sample_every`` (per-request event thinning), ``metrics``
   (log-bucketed latency/queue-wait histograms + unified counter
   snapshot);
+* ``MemPlan``    — hierarchical memory tier (``repro.mem``): ``cold_tier``
+  (host-RAM slab arena under the hot LRU — eviction demotes instead of
+  discarding, off by default), ``cold_bytes`` (arena byte budget),
+  ``promote_touches`` / ``promote_window_s`` (async cold->hot promotion
+  requires k touches within a sliding window — Zipf tail users never
+  thrash the hot/device tiers), ``warm_batch`` (chunk size of the bulk
+  offline ``warm()`` feed into the cold arena);
 * ``FaultPlan``  — fault tolerance (``repro.ft``, section key ``ft``):
   ``inject`` + ``seed`` + ``sites`` (deterministic fault injection,
   off by default — each site spec is ``site:kind[:k=v,...]``, see
@@ -106,6 +113,21 @@ admission thresholds (``shed_queue_depth`` /          drop them + warn (the
                                                       — same contract the
                                                       engine always had)
 non-positive ``trace_capacity`` / ``sample_every``    reject
+non-positive ``mem.cold_bytes`` /                     reject
+``mem.promote_touches`` / ``mem.promote_window_s``
+/ ``mem.warm_batch``
+``mem.cold_tier`` without ``cache.cache_user_reps``   drop ``cold_tier`` +
+                                                      warn — the cold tier
+                                                      catches hot-LRU
+                                                      evictions and feeds
+                                                      promotions back into
+                                                      the hot cache; with
+                                                      no hot cache there is
+                                                      nothing to demote
+                                                      from or promote into
+``mem.cold_bytes`` / ``promote_touches`` /            drop them + warn (they
+``promote_window_s`` / ``warm_batch``                 parameterize the cold
+(non-default) without ``mem.cold_tier``               tier only)
 ``trace_capacity`` / ``sample_every != 1`` without    drop them + warn (they
 ``trace=True``                                        parameterize the
                                                       tracer only)
@@ -250,10 +272,21 @@ class FaultPlan:
     breaker_probes: int = 1            # half-open successes to close
 
 
+@dataclasses.dataclass(frozen=True)
+class MemPlan:
+    """Hierarchical memory tier: host-RAM cold store + async promotion +
+    bulk warming (``repro.mem``)."""
+    cold_tier: bool = False            # arm the host-RAM cold rep arena
+    cold_bytes: int = 1 << 28          # arena byte budget (256 MiB)
+    promote_touches: int = 2           # cold hits needed to promote ...
+    promote_window_s: float = 60.0     # ... within this sliding window
+    warm_batch: int = 256              # bulk-warm chunk between dev syncs
+
+
 _SECTIONS: dict[str, type] = {"graph": GraphPlan, "kernel": KernelPlan,
                               "batch": BatchPlan, "shard": ShardPlan,
                               "cache": CachePlan, "obs": ObsPlan,
-                              "ft": FaultPlan}
+                              "mem": MemPlan, "ft": FaultPlan}
 
 # legacy ServingEngine kwarg -> (section, field). The shim in
 # ``ServingEngine.__init__`` routes deprecated keyword construction here.
@@ -305,6 +338,9 @@ _FIELD_TYPES: dict[str, dict[str, str]] = {
               "device_resident": "bool", "device_slots": "int?"},
     "obs": {"trace": "bool", "trace_capacity": "int?",
             "sample_every": "int", "metrics": "bool"},
+    "mem": {"cold_tier": "bool", "cold_bytes": "int",
+            "promote_touches": "int", "promote_window_s": "num",
+            "warm_batch": "int"},
     "ft": {"inject": "bool", "seed": "int", "sites": "strs",
            "retries": "int", "retry_backoff_ms": "num",
            "retry_jitter": "num", "breaker_failures": "int",
@@ -350,6 +386,7 @@ class ServePlan:
     shard: ShardPlan = ShardPlan()
     cache: CachePlan = CachePlan()
     obs: ObsPlan = ObsPlan()
+    mem: MemPlan = MemPlan()
     ft: FaultPlan = FaultPlan()
 
     # -- validation ---------------------------------------------------------
@@ -380,8 +417,9 @@ class ServePlan:
                          f"{name}.{field} must be {kind.rstrip('?')}"
                          f"{' or None' if kind.endswith('?') else ''}, "
                          f"got {type(v).__name__} ({v!r})")
-        g, k, b, s, c, o, f = (self.graph, self.kernel, self.batch,
-                               self.shard, self.cache, self.obs, self.ft)
+        g, k, b, s, c, o, m, f = (self.graph, self.kernel, self.batch,
+                                  self.shard, self.cache, self.obs,
+                                  self.mem, self.ft)
 
         # hard errors: contradictions with no meaningful resolution
         _require(g.mode in MODES,
@@ -443,6 +481,16 @@ class ServePlan:
                  f"default), got {o.trace_capacity}")
         _require(o.sample_every >= 1,
                  f"sample_every must be >= 1, got {o.sample_every}")
+        _require(m.cold_bytes >= 1,
+                 f"mem.cold_bytes must be >= 1, got {m.cold_bytes}")
+        _require(m.promote_touches >= 1,
+                 f"mem.promote_touches must be >= 1, got "
+                 f"{m.promote_touches}")
+        _require(m.promote_window_s > 0,
+                 f"mem.promote_window_s must be > 0, got "
+                 f"{m.promote_window_s}")
+        _require(m.warm_batch >= 1,
+                 f"mem.warm_batch must be >= 1, got {m.warm_batch}")
         _require(f.retries >= 0, f"retries must be >= 0, got {f.retries}")
         _require(f.retry_backoff_ms >= 0,
                  f"retry_backoff_ms must be >= 0, got {f.retry_backoff_ms}")
@@ -541,6 +589,39 @@ class ServePlan:
                                dataclasses.replace(self.cache,
                                                    device_slots=None))
             c = self.cache
+        if m.cold_tier and not c.cache_user_reps:
+            notes.append(
+                "mem.cold_tier without cache.cache_user_reps: the cold tier "
+                "catches hot-LRU evictions and feeds promotions back into "
+                "the hot cache — with no hot cache there is nothing to "
+                "demote from or promote into; resolved to cold_tier=False")
+            object.__setattr__(self, "mem",
+                               dataclasses.replace(self.mem,
+                                                   cold_tier=False))
+            m = self.mem
+        mem_knobs = [n for n, v in
+                     (("cold_bytes",
+                       None if m.cold_bytes == 1 << 28 else m.cold_bytes),
+                      ("promote_touches",
+                       None if m.promote_touches == 2 else m.promote_touches),
+                      ("promote_window_s",
+                       None if m.promote_window_s == 60.0 else
+                       m.promote_window_s),
+                      ("warm_batch",
+                       None if m.warm_batch == 256 else m.warm_batch))
+                     if v is not None]
+        if mem_knobs and not m.cold_tier:
+            notes.append(
+                f"mem.{'/'.join(mem_knobs)} without mem.cold_tier=True: "
+                f"they parameterize the cold tier only — resolved to "
+                f"defaults (set cold_tier=True to keep them)")
+            object.__setattr__(self, "mem",
+                               dataclasses.replace(self.mem,
+                                                   cold_bytes=1 << 28,
+                                                   promote_touches=2,
+                                                   promote_window_s=60.0,
+                                                   warm_batch=256))
+            m = self.mem
         trc_knobs = [n for n, v in
                      (("trace_capacity", o.trace_capacity),
                       ("sample_every",

@@ -182,6 +182,14 @@ class RankingService:
         futs = [self.submit(scenario, req) for scenario, req in items]
         return [f.result() for f in futs]
 
+    # -- memory hierarchy ----------------------------------------------------
+    def warm(self, scenario: str, items, feature_version: int = 0) -> int:
+        """Bulk-precompute stage-1 reps into a scenario's cold tier (see
+        ``ServingEngine.warm``); requires ``plan.mem.cold_tier=True`` for
+        that scenario. ``items``: ``(user_id, user_feeds)`` pairs."""
+        return self._get(scenario).engine.warm(
+            items, feature_version=feature_version)
+
     # -- observability ------------------------------------------------------
     def stats(self) -> dict:
         """Per-scenario serving counters (including the stage-boundary
@@ -237,6 +245,9 @@ class RankingService:
                     "device_store": (s.engine.device_store.stats()
                                      if s.engine.device_store is not None
                                      else None),
+                    # memory hierarchy (plan.mem): cold arena occupancy,
+                    # promotion-policy counters, warm-feed totals
+                    "mem": s.engine.mem_stats(),
                 } for s in self._scenarios.values()},
             # host-tier stats() carries users/max_users/hits/misses/
             # evictions plus bytes + per-boundary bytes

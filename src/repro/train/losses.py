@@ -46,3 +46,21 @@ def auc(scores, labels) -> float:
     ranks = (sums / cnt)[inv]
     r_pos = ranks[: len(pos)].sum()
     return float((r_pos - len(pos) * (len(pos) + 1) / 2) / (len(pos) * len(neg)))
+
+
+def valid_task_aucs(scores, labels) -> dict[int, float]:
+    """Per-task ROC-AUCs over the trailing task axis, skipping degenerate
+    slices.
+
+    ``scores``/``labels`` are ``(B, T)`` multi-task outputs. A task whose
+    label slice is single-class has no defined ROC (``auc`` returns NaN);
+    such tasks are OMITTED from the result instead of poisoning downstream
+    comparisons — callers assert on the tasks that remain."""
+    scores = np.asarray(scores)
+    labels = np.asarray(labels)
+    out: dict[int, float] = {}
+    for t in range(scores.shape[-1]):
+        a = auc(scores[..., t], labels[..., t])
+        if not np.isnan(a):
+            out[t] = a
+    return out
